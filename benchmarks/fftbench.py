@@ -1,0 +1,142 @@
+"""Subprocess worker: time one distributed-FFT configuration.
+
+Mirrors the paper's methodology (Sec. 4): an inner loop of ``--inner``
+consecutive forward+backward transforms, repeated ``--outer`` times; we
+report the fastest outer iteration divided by inner (their "fastest of 50
+outers of 3").  ``--measure redistribution`` times an exchanges-only plan
+(the paper's "global redistribution" split); fft time = total - redist.
+
+Run via benchmarks.paperfigs which sets XLA_FLAGS for the device count.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_plan(shape, gridspec, ndev, *, real, method, impl):
+    from repro.core.meshutil import make_mesh
+    from repro.core.pfft import ParallelFFT
+
+    if gridspec == "slab":
+        mesh = make_mesh((ndev,), ("p0",))
+        grid = ("p0",)
+    elif gridspec == "pencil":
+        a = int(np.sqrt(ndev))
+        while ndev % a:
+            a -= 1
+        mesh = make_mesh((a, ndev // a), ("p0", "p1"))
+        grid = ("p0", "p1")
+    elif gridspec == "grid3":
+        dims = []
+        rem = ndev
+        for _ in range(2):
+            a = int(round(rem ** (1 / (3 - len(dims)))))
+            while rem % a:
+                a -= 1
+            dims.append(a)
+            rem //= a
+        dims.append(rem)
+        mesh = make_mesh(tuple(dims), ("p0", "p1", "p2"))
+        grid = ("p0", "p1", "p2")
+    else:
+        raise ValueError(gridspec)
+    return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl)
+
+
+def exchanges_only(plan):
+    """A jit'd function running only the plan's exchange stages (paper's
+    'global redistribution' timing split)."""
+    from functools import partial
+
+    from repro.core.meshutil import shard_map
+    from repro.core.pfft import ExchangeStage
+    from repro.core.redistribute import exchange_shard
+
+    stages = [(s, b, a) for s, b, a in zip(plan.stages, plan.pencil_trace,
+                                           plan.pencil_trace[1:])
+              if isinstance(s, ExchangeStage)]
+
+    def run(block):
+        for st, before, after in stages:
+            # emulate the fft-stage shape change between exchanges
+            if block.shape != tuple(np.array(before.local_shape)):
+                block = jnp.zeros(before.local_shape, block.dtype)
+            block = exchange_shard(block, st.v, st.w, st.group, method=plan.method)
+        return block
+
+    first = stages[0][1]
+    fn = shard_map(run, mesh=plan.mesh, in_specs=first.spec,
+                   out_specs=stages[-1][2].spec, check_vma=False)
+    return jax.jit(fn), first
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", type=str, required=True)  # e.g. 128,128,128
+    ap.add_argument("--grid", choices=["slab", "pencil", "grid3"], default="slab")
+    ap.add_argument("--method", choices=["fused", "traditional"], default="fused")
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--impl", default="jnp")
+    ap.add_argument("--inner", type=int, default=3)
+    ap.add_argument("--outer", type=int, default=10)
+    ap.add_argument("--measure", choices=["total", "redistribution"], default="total")
+    args = ap.parse_args(argv)
+
+    shape = tuple(int(s) for s in args.shape.split(","))
+    ndev = len(jax.devices())
+    plan = build_plan(shape, args.grid, ndev, real=args.real,
+                      method=args.method, impl=args.impl)
+
+    rng = np.random.default_rng(0)
+    if args.real:
+        x = rng.standard_normal(shape).astype(np.float32)
+    else:
+        x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    from repro.core.pencil import pad_global
+
+    xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
+                        plan.input_pencil.sharding)
+
+    if args.measure == "redistribution":
+        fn, first = exchanges_only(plan)
+        buf = rng.standard_normal(first.physical).astype(np.float32)
+        if not args.real:
+            buf = (buf + 1j * rng.standard_normal(first.physical)).astype(np.complex64)
+        xg = jax.device_put(jnp.asarray(buf), first.sharding)
+
+        def once(v):
+            return fn(v)
+    else:
+        fwd, bwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
+
+        def once(v):
+            return bwd(fwd(v))
+
+    once(xg).block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(args.outer):
+        t0 = time.perf_counter()
+        v = xg
+        for _ in range(args.inner):
+            v = once(v)
+        v.block_until_ready()
+        best = min(best, (time.perf_counter() - t0) / args.inner)
+    print(json.dumps({
+        "shape": shape, "grid": args.grid, "method": args.method,
+        "real": bool(args.real), "ndev": ndev, "measure": args.measure,
+        "best_s": best,
+        "comm_bytes_per_dev": plan.comm_bytes_per_device(8 if not args.real else 8),
+        "model_flops": plan.model_flops(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from artifacts.
+
+Replaces the <!-- placeholder --> markers with tables built from
+benchmarks/artifacts/. Idempotent: content between a marker and the next
+section header is regenerated on every run.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+ART = REPO / "benchmarks" / "artifacts"
+
+
+def roofline_md(mesh):
+    sys.path.insert(0, str(REPO))
+    from benchmarks.roofline import analyze, to_markdown
+    rows = analyze(mesh)
+    return to_markdown(rows) if rows else "(no artifacts)"
+
+
+def dryrun_md():
+    rows = []
+    want = [("qwen2_72b", "train_4k"), ("qwen2_72b", "decode_32k"),
+            ("deepseek_v2_lite_16b", "train_4k"), ("llava_next_34b", "prefill_32k"),
+            ("falcon_mamba_7b", "long_500k"), ("zamba2_2p7b", "long_500k"),
+            ("seamless_m4t_medium", "train_4k")]
+    out = ["| arch | shape | chips | flops/dev | HBM bytes/dev | coll bytes/dev | compile |",
+           "|---|---|---|---|---|---|---|"]
+    for arch, shape in want:
+        p = ART / "dryrun" / f"{arch}__{shape}__single.json"
+        if not p.exists():
+            continue
+        r = json.loads(p.read_text())
+        a = r["acct"]
+        out.append(f"| {arch} | {shape} | {r['chips']} | "
+                   f"{a['flops_per_device']:.2e} | {a['hbm_bytes_per_device']:.2e} | "
+                   f"{a['collectives_per_device'].get('total', 0):.2e} | "
+                   f"{r.get('compile_s', '?')}s |")
+    return "\n".join(out)
+
+
+def fft_md():
+    p = ART / "figs" / "fft_roofline.json"
+    lines = []
+    if p.exists():
+        d = json.loads(p.read_text())
+        lines.append("Production-mesh FFT dry-run (fig10: 512³ r2c pencil on 16×16; "
+                     "fig11: 64⁴ c2c on 8×8×4; fwd+bwd; REPRO_BENCH_SCALE=paper "
+                     "switches to 2048³/128⁴):\n")
+        lines.append("| case | method | serial FFT | compute s | memory s | collective s | dominant |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for k in ("fig10_fused", "fig10_traditional", "fig10_fused_matmulDFT",
+                  "fig11_fused", "fig11_traditional"):
+            if k not in d:
+                continue
+            r = d[k]
+            lines.append(f"| {k.split('_')[0]} | {r['method']} | {r.get('impl', 'jnp')} "
+                         f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                         f"| {r['collective_s']:.2e} | {r['dominant']} |")
+        if "fig10_fused_matmulDFT" in d:
+            lines.append(
+                "\nThe `matmul` row is the TPU-native four-step MXU DFT "
+                "(DESIGN.md §4): ~7x the radix-FFT FLOPs as predicted, still "
+                "<<1% of the memory term — confirming the serial transform is "
+                "never the bottleneck and the MXU path is affordable. (Its "
+                "memory term is inflated by interpret-mode lowering, which "
+                "streams VMEM-resident intermediates; noted, not claimed.)")
+        f10f, f10t = d["fig10_fused"], d["fig10_traditional"]
+        lines.append(f"\nfig10 traditional/fused HBM = "
+                     f"{f10t['hbm_bytes_per_device'] / f10f['hbm_bytes_per_device']:.2f}x "
+                     "(the pack/unpack copies). Both dominated by memory/collective — "
+                     "FFT is the textbook communication-bound workload, which is the "
+                     "paper's premise.")
+    # wall-time fig tables
+    for fig in ("fig6", "fig7", "fig8", "fig9", "fig11"):
+        p = ART / "figs" / f"{fig}.json"
+        if not p.exists():
+            continue
+        rows = json.loads(p.read_text())
+        lines.append(f"\n**{fig}** (CPU wall-time, 1 physical core, N virtual "
+                     "devices — relative method comparison only):\n")
+        lines.append("| ndev | shape | method | measure | best s |")
+        lines.append("|---|---|---|---|---|")
+        for r in rows:
+            lines.append(f"| {r['ndev']} | {'x'.join(map(str, r['shape']))} "
+                         f"| {r['method']} | {r['measure']} | {r['best_s']:.4f} |")
+    return "\n".join(lines)
+
+
+MARKERS = {
+    "<!-- ROOFLINE_TABLE_SINGLE -->": lambda: roofline_md("single"),
+    "<!-- ROOFLINE_TABLE_MULTI -->": lambda: roofline_md("multi"),
+    "<!-- DRYRUN_TABLE -->": dryrun_md,
+    "<!-- PERF_FFT -->": fft_md,
+    "<!-- ROOFLINE_NOTES -->": lambda: ROOFLINE_NOTES,
+}
+
+ROOFLINE_NOTES = """\
+* **Every baseline cell is memory-dominated (HLO upper bound).** Three
+  honest reasons, separated by the lb column: (i) fp32 softmax/score
+  chains and norm chains stream (B,S,D)-sized fp32 fusions on this CPU
+  lowering — a TPU build fuses more (the flash kernel keeps score tiles in
+  VMEM entirely); (ii) full-layer remat re-streams the forward; (iii) real
+  algorithmic traffic (caches, stashes). The analytic lower bound (perfect
+  fusion) shows the other extreme; truth for a TPU build lies between.
+* **MODEL/HLO flops** ~0.7–0.8 for dense trains = remat + attention +
+  dispatch overheads (full remat ≈ 4/3 fwd reuse + masked attention 2x);
+  ~0.3–0.5 for prefill (masked attention, fixed by the `tri` §Perf flag);
+  ≥1.0 for SSM archs (6·N·D overestimates attention-free archs).
+* **decode/long cells have roofline frac ≈ 0**: one token per step cannot
+  amortize reading N_active params — decode is bandwidth-bound by nature;
+  the §Perf lever is cache traffic (hmajor) and batching, not FLOPs.
+* **collective term** is within 2.4x of the dominant memory term for the
+  big dense trains (qwen2: 29s vs 50s) — FSDP gathers + fp32 TP activation
+  all-reduces; §Perf iterations 1.1/1.3 attack it (dots remat −12%,
+  Megatron-SP refuted on this lowering).
+* long_500k runs only on the sub-quadratic archs (zamba2, falcon-mamba) —
+  their decode state is O(1)/O(S·d_state) vs O(S·H·dh): falcon long_500k
+  memory term 0.39 ms vs a hypothetical 32k-cache dense decode at ~100 ms.
+* Known accounting approximations: conditional branches double-counted
+  (upper bound); Pallas custom-calls opaque to cost analysis (flash kernel
+  benefits argued structurally, never claimed numerically)."""
+
+
+def main():
+    text = (REPO / "EXPERIMENTS.md").read_text()
+    for marker, fn in MARKERS.items():
+        if marker not in text:
+            print(f"marker missing: {marker}")
+            continue
+        content = fn()
+        # replace marker (and any previously generated block up to next header)
+        pattern = re.escape(marker) + r"(?:\n<!-- gen -->.*?<!-- /gen -->)?"
+        repl = marker + "\n<!-- gen -->\n" + content + "\n<!-- /gen -->"
+        text = re.sub(pattern, lambda m: repl, text, count=1, flags=re.S)
+    (REPO / "EXPERIMENTS.md").write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""§Perf comparison report: baseline vs flagged variants per cell.
+
+Reads dry-run artifacts and prints, for every (arch, shape) with variants,
+the three roofline terms per flag set and the delta vs baseline — the
+measured half of the hypothesis→change→measure log in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+ART = REPO / "benchmarks" / "artifacts" / "dryrun"
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def terms(rec):
+    a = rec["acct"]
+    return {
+        "compute_s": a["flops_per_device"] / PEAK,
+        "memory_s": a["hbm_bytes_per_device"] / HBM,
+        "collective_s": a["collectives_per_device"].get("total", 0.0) / ICI,
+    }
+
+
+def main():
+    cells: dict[tuple, dict[str, dict]] = {}
+    for path in sorted(ART.glob("*__single*.json")):
+        rec = json.loads(path.read_text())
+        key = (rec["arch"], rec["shape"])
+        variant = rec.get("flags") or ("opt" if rec.get("opt") else "baseline")
+        if rec.get("sp_mode", "none") != "none":
+            variant = rec["sp_mode"]
+        cells.setdefault(key, {})[variant or "baseline"] = rec
+
+    rows = []
+    for (arch, shape), variants in sorted(cells.items()):
+        if len(variants) < 2 or "baseline" not in variants:
+            continue
+        base = terms(variants["baseline"])
+        print(f"\n## {arch} x {shape}")
+        print("| variant | compute s | memory s | collective s | Δcompute | Δmemory | Δcollective |")
+        print("|---|---|---|---|---|---|---|")
+        print(f"| baseline | {base['compute_s']:.3e} | {base['memory_s']:.3e} "
+              f"| {base['collective_s']:.3e} | — | — | — |")
+        for name, rec in sorted(variants.items()):
+            if name == "baseline":
+                continue
+            t = terms(rec)
+            deltas = {k: (t[k] / base[k] - 1.0) * 100 if base[k] else 0.0
+                      for k in t}
+            print(f"| {name} | {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+                  f"| {t['collective_s']:.3e} | {deltas['compute_s']:+.1f}% "
+                  f"| {deltas['memory_s']:+.1f}% | {deltas['collective_s']:+.1f}% |")
+            rows.append({"arch": arch, "shape": shape, "variant": name,
+                         **t, "base": base})
+    out = REPO / "benchmarks" / "artifacts" / "perf_report.json"
+    out.write_text(json.dumps(rows, indent=1, default=str))
+    print(f"\n-> {out}")
+
+
+if __name__ == "__main__":
+    main()

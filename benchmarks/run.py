@@ -1,0 +1,51 @@
+"""Benchmark driver: one entry per paper table/figure + the roofline tables.
+
+  python -m benchmarks.run            # everything, container-scaled
+  python -m benchmarks.run figs       # only wall-time figure benches (6-9,11)
+  python -m benchmarks.run roofline   # only LM roofline tables (needs dry-run)
+  python -m benchmarks.run fft        # only production FFT roofline (10/11)
+
+REPRO_BENCH_SCALE=paper switches to the paper's global sizes (hours).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _sub(mod, *args, extra_env=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + str(REPO)
+    if extra_env:
+        env.update(extra_env)
+    print(f"\n===== {mod} {' '.join(args)} =====", flush=True)
+    r = subprocess.run([sys.executable, "-m", mod, *args], env=env, cwd=REPO)
+    if r.returncode != 0:
+        raise SystemExit(f"{mod} failed rc={r.returncode}")
+
+
+def main(argv=None):
+    which = set((argv if argv is not None else sys.argv[1:]) or
+                ["figs", "fft", "roofline"])
+    if "figs" in which:
+        _sub("benchmarks.paperfigs")
+    if "fft" in which:
+        _sub("benchmarks.fft_roofline")
+    if "roofline" in which:
+        art = REPO / "benchmarks" / "artifacts" / "dryrun"
+        if not any(art.glob("*single.json")):
+            print("(dry-run artifacts missing; generating single-pod set — slow)")
+            _sub("repro.launch.dryrun", "--all", "--mesh", "single")
+        _sub("benchmarks.roofline", "single")
+        if any(art.glob("*multi.json")):
+            _sub("benchmarks.roofline", "multi")
+    print("\nBENCHMARKS COMPLETE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Pseudo-spectral incompressible Navier-Stokes on a pencil-decomposed box —
+the paper's motivating application (DNS of turbulence; Sec. 1).
+
+Taylor-Green vortex in [0, 2pi)^3, vorticity-free projection form:
+
+    du/dt = P[-(u . grad) u] - nu k^2 u_hat      (spectral space)
+
+Nonlinear term evaluated pseudo-spectrally (3 inverse + 9 forward 1-D FFT
+sweeps per evaluation, 2/3-rule dealiased), Leray projection in spectral
+space, RK2 time stepping.  Every transform is the paper's fused-exchange
+pencil FFT.  Checks: incompressibility preserved and kinetic energy decays
+at the viscous rate (dE/dt = -2 nu Z at t=0 for Taylor-Green).
+
+Run:  PYTHONPATH=src python examples/navier_stokes.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+mesh = make_mesh((2, 4), ("p0", "p1"))
+N = 48
+NU = 0.05
+DT = 5e-3
+STEPS = 12
+
+plan = ParallelFFT(mesh, (N, N, N), grid=("p0", "p1"), real=True, method="fused")
+
+# wavenumbers on the r2c output grid
+kx = jnp.fft.fftfreq(N, 1 / N)
+ky = jnp.fft.fftfreq(N, 1 / N)
+kz = jnp.arange(N // 2 + 1, dtype=jnp.float32)
+KX = kx[:, None, None]
+KY = ky[None, :, None]
+KZ = kz[None, None, :]
+K2 = KX**2 + KY**2 + KZ**2
+K2_safe = jnp.where(K2 == 0, 1.0, K2)
+# 2/3-rule dealiasing mask
+cut = N // 3
+DEALIAS = ((jnp.abs(KX) < cut) & (jnp.abs(KY) < cut) & (KZ < cut)).astype(jnp.float32)
+
+
+def fwd(u):
+    return plan.forward(u)
+
+
+def bwd(u_hat):
+    return plan.backward(u_hat)
+
+
+def project(v_hat):
+    """Leray projection: remove the compressible part (k . v) k / |k|^2."""
+    div = KX * v_hat[0] + KY * v_hat[1] + KZ * v_hat[2]
+    return jnp.stack([v_hat[0] - KX * div / K2_safe,
+                      v_hat[1] - KY * div / K2_safe,
+                      v_hat[2] - KZ * div / K2_safe])
+
+
+def rhs(u_hat):
+    """P[-(u.grad)u] - nu k^2 u_hat, pseudo-spectral + dealiased."""
+    u = jnp.stack([bwd(u_hat[i]) for i in range(3)])           # physical
+    grads = jnp.stack([
+        jnp.stack([bwd(1j * k * u_hat[i]) for k in (KX, KY, KZ)])
+        for i in range(3)])                                    # du_i/dx_j
+    conv = jnp.einsum("jxyz,ijxyz->ixyz", u, grads)            # (u.grad)u
+    conv_hat = jnp.stack([fwd(conv[i]) * DEALIAS for i in range(3)])
+    return project(-conv_hat) - NU * K2 * u_hat
+
+
+@jax.jit
+def step(u_hat):
+    k1 = rhs(u_hat)
+    k2 = rhs(u_hat + DT * k1)
+    return project(u_hat + 0.5 * DT * (k1 + k2))
+
+
+def energy(u_hat):
+    # Parseval on the rfft grid: kz>0 modes count twice
+    w = jnp.where(KZ == 0, 1.0, 2.0)
+    return 0.5 * jnp.sum(w * jnp.abs(u_hat) ** 2) / N**3
+
+
+def max_divergence(u_hat):
+    return jnp.max(jnp.abs(KX * u_hat[0] + KY * u_hat[1] + KZ * u_hat[2]))
+
+
+# Taylor-Green initial condition
+x = jnp.arange(N) * 2 * jnp.pi / N
+X, Y, Z = jnp.meshgrid(x, x, x, indexing="ij")
+u0 = jnp.stack([jnp.cos(X) * jnp.sin(Y) * jnp.sin(Z),
+                -jnp.sin(X) * jnp.cos(Y) * jnp.sin(Z),
+                jnp.zeros_like(X)])
+u_hat = project(jnp.stack([fwd(u0[i]) for i in range(3)]))
+
+E0 = float(energy(u_hat))
+print(f"Taylor-Green DNS: N={N}^3, mesh={dict(mesh.shape)}, nu={NU}, dt={DT}")
+print(f"t=0      E={E0:.6f}  max|div|={float(max_divergence(u_hat)):.2e}")
+Es = [E0]
+for n in range(STEPS):
+    u_hat = step(u_hat)
+    Es.append(float(energy(u_hat)))
+div = float(max_divergence(u_hat))
+print(f"t={STEPS * DT:.3f}  E={Es[-1]:.6f}  max|div|={div:.2e}")
+
+# checks: energy decays monotonically at ~the viscous rate; flow stays solenoidal
+assert all(e2 < e1 + 1e-9 for e1, e2 in zip(Es, Es[1:])), "energy must decay"
+assert div < 1e-3 * np.sqrt(E0), f"divergence grew: {div}"
+# Taylor-Green: dE/dt(0) = -2 nu Z(0), Z(0) = 3/16 *(2pi)^3... in our
+# normalization E0 = 1/8, Z0 = 3 E0 -> expected initial decay rate 6 nu E0
+rate = (Es[0] - Es[1]) / (DT * Es[0])
+print(f"measured initial decay rate {rate:.3f} vs 6*nu = {6 * NU:.3f}")
+assert abs(rate - 6 * NU) < 0.1 * 6 * NU
+print("ok")

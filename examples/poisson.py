@@ -1,0 +1,46 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Spectral Poisson solver on a pencil-decomposed 3-D grid.
+
+Solves  -lap(u) = f  on the periodic box [0, 2pi)^3 with the distributed
+r2c/c2r transform: u_hat = f_hat / |k|^2.  This is the canonical "FFT at
+the core of a PDE solver" workload the paper's DNS motivation describes.
+
+Run:  PYTHONPATH=src python examples/poisson.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+mesh = make_mesh((2, 4), ("p0", "p1"))
+N = (64, 64, 64)
+plan = ParallelFFT(mesh, N, grid=("p0", "p1"), real=True, method="fused")
+
+# manufactured solution: u* = sin(3x) cos(2y) sin(z)  ->  f = |k*|^2 u*
+x, y, z = np.meshgrid(*(np.arange(n) * 2 * np.pi / n for n in N), indexing="ij")
+u_star = np.sin(3 * x) * np.cos(2 * y) * np.sin(z)
+f = (3**2 + 2**2 + 1**2) * u_star
+
+f_hat = plan.forward(jnp.asarray(f, jnp.float32))
+
+# wavenumbers on the OUTPUT pencil's logical grid (rfft halves the last axis)
+kx = np.fft.fftfreq(N[0], 1 / N[0])
+ky = np.fft.fftfreq(N[1], 1 / N[1])
+kz = np.arange(N[2] // 2 + 1)
+K2 = (kx[:, None, None] ** 2 + ky[None, :, None] ** 2 + kz[None, None, :] ** 2)
+K2[0, 0, 0] = 1.0  # zero mode
+
+u_hat = f_hat / jnp.asarray(K2, jnp.float32)
+u_hat = u_hat.at[0, 0, 0].set(0.0)
+u = plan.backward(u_hat)
+
+err = float(jnp.max(jnp.abs(u - u_star)))
+print(f"Poisson solve: N={N}, mesh={dict(mesh.shape)}, max|u - u*| = {err:.2e}")
+assert err < 1e-3, err
+print("ok")

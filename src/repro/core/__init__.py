@@ -1,0 +1,29 @@
+"""Core library: the paper's global-redistribution method and parallel FFT.
+
+Public API:
+  decompose, AxisDecomp            — balanced block decomposition (Alg. 1)
+  Pencil, make_pencil              — distributed-array alignment state
+  exchange, exchange_shard         — the paper's fused v→w redistribution
+  ParallelFFT                      — slab/pencil/d-dim distributed FFT
+"""
+
+from repro.core.decomp import AxisDecomp, decompose, local_lengths, pad_to_multiple, start_indices
+from repro.core.pencil import Pencil, group_size, make_pencil, pad_global, unpad_global
+from repro.core.redistribute import exchange, exchange_shard
+from repro.core.pfft import ParallelFFT
+
+__all__ = [
+    "AxisDecomp",
+    "decompose",
+    "local_lengths",
+    "pad_to_multiple",
+    "start_indices",
+    "Pencil",
+    "group_size",
+    "make_pencil",
+    "pad_global",
+    "unpad_global",
+    "exchange",
+    "exchange_shard",
+    "ParallelFFT",
+]

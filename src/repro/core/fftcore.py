@@ -1,0 +1,42 @@
+"""Local (serial) FFT dispatch — the paper's ``seqxfftn``.
+
+The paper assumes a vendor serial FFT (FFTW/MKL/ESSL).  Here the "vendor"
+choices are:
+
+``impl="jnp"``     — ``jnp.fft`` (XLA FFT HLO).  Reference path; used for
+                     oracles and the CPU container.
+``impl="matmul"``  — four-step matmul DFT on the MXU via the Pallas kernel in
+                     ``repro.kernels.fft`` (TPU-native adaptation, DESIGN.md
+                     §4).  Falls back to a pure-jnp matmul DFT for axis
+                     lengths the kernel does not tile.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+FORWARD = -1
+BACKWARD = +1
+
+
+def local_fft(x, axis: int, sign: int, *, impl: str = "jnp", real: str | None = None, n: int | None = None):
+    """1-D transform along ``axis`` of a locally-complete (possibly padded
+    elsewhere) block.  ``real`` ∈ {None, "r2c", "c2r"}; ``n`` is the logical
+    length for c2r."""
+    if impl == "jnp":
+        if real == "r2c":
+            assert sign == FORWARD
+            return jnp.fft.rfft(x, axis=axis)
+        if real == "c2r":
+            assert sign == BACKWARD
+            return jnp.fft.irfft(x, n=n, axis=axis)
+        return jnp.fft.fft(x, axis=axis) if sign == FORWARD else jnp.fft.ifft(x, axis=axis)
+    if impl == "matmul":
+        from repro.kernels.fft import ops as fft_ops
+
+        if real == "r2c":
+            return fft_ops.rfft_matmul(x, axis=axis)
+        if real == "c2r":
+            return fft_ops.irfft_matmul(x, n=n, axis=axis)
+        return fft_ops.fft_matmul(x, axis=axis, inverse=(sign == BACKWARD))
+    raise ValueError(f"unknown fft impl {impl!r}")

@@ -1,0 +1,13 @@
+"""Mesh + shard_map compat helpers (jax 0.8.x)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+shard_map = jax.shard_map
+
+
+def make_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types (stable across 0.8→0.9)."""
+    return jax.make_mesh(shape, axis_names, axis_types=(AxisType.Auto,) * len(axis_names))

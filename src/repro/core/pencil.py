@@ -1,0 +1,151 @@
+"""Pencil (distributed-array alignment) abstraction — paper Sec. 3.4/3.5.
+
+A ``Pencil`` describes how a d-dimensional global array is laid out over a
+named JAX mesh: for each array axis, either ``None`` (axis is *aligned*, i.e.
+fully local) or the mesh-axis name(s) it is block-distributed over.  This is
+the JAX analogue of the paper's Cartesian process topologies + 1-D subgroups
+(``MPI_CART_SUB``): a mesh axis name *is* a process subgroup, and naming it in
+a collective restricts communication to that subgroup — the paper's key
+observation that a pencil decomposition is a collection of slab
+decompositions over 1-D subgroups falls out for free.
+
+Physical vs logical extents: XLA SPMD needs equal shards, so each axis is
+stored padded to a multiple of every subgroup size it is ever distributed
+over (``lcm`` policy; see core/decomp.py and DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from functools import cached_property
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.decomp import pad_to_multiple
+
+# A "group" is one mesh axis name or a tuple of names (composed subgroup).
+Group = str | tuple[str, ...]
+
+
+def group_names(group: Group) -> tuple[str, ...]:
+    return (group,) if isinstance(group, str) else tuple(group)
+
+
+def group_size(mesh: Mesh, group: Group) -> int:
+    return int(np.prod([mesh.shape[n] for n in group_names(group)], dtype=np.int64))
+
+
+@dataclass(frozen=True)
+class Pencil:
+    """Alignment state of a distributed d-dim array.
+
+    ``logical``   — true global extents (paper's N_m).
+    ``physical``  — stored global extents (padded; equal-shard policy).
+    ``placement`` — per array axis: mesh axis name(s) or None (aligned).
+    """
+
+    mesh: Mesh = field(repr=False)
+    logical: tuple[int, ...]
+    physical: tuple[int, ...]
+    placement: tuple[Group | None, ...]
+
+    def __post_init__(self):
+        assert len(self.logical) == len(self.physical) == len(self.placement)
+        for ext, grp in zip(self.physical, self.placement):
+            if grp is not None:
+                m = group_size(self.mesh, grp)
+                if ext % m != 0:
+                    raise ValueError(
+                        f"physical extent {ext} not divisible by group {grp} (size {m})"
+                    )
+
+    @property
+    def ndim(self) -> int:
+        return len(self.logical)
+
+    @cached_property
+    def spec(self) -> P:
+        return P(*self.placement)
+
+    @cached_property
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec)
+
+    @cached_property
+    def local_shape(self) -> tuple[int, ...]:
+        out = []
+        for ext, grp in zip(self.physical, self.placement):
+            out.append(ext if grp is None else ext // group_size(self.mesh, grp))
+        return tuple(out)
+
+    def aligned(self, axis: int) -> bool:
+        return self.placement[axis] is None
+
+    def exchanged(self, v: int, w: int) -> "Pencil":
+        """Alignment after the paper's v→w exchange: axis ``v`` (currently
+        aligned) takes over the subgroup of axis ``w`` (currently
+        distributed); axis ``w`` becomes aligned.  Physical extents are
+        unchanged — redistribution never resizes (paper Eq. 20)."""
+        if not self.aligned(v):
+            raise ValueError(f"axis v={v} must be aligned, placement={self.placement}")
+        grp = self.placement[w]
+        if grp is None:
+            raise ValueError(f"axis w={w} must be distributed, placement={self.placement}")
+        m = group_size(self.mesh, grp)
+        if self.physical[v] % m != 0:
+            raise ValueError(
+                f"axis v={v} physical extent {self.physical[v]} not divisible by |{grp}|={m}"
+            )
+        new_placement = list(self.placement)
+        new_placement[v] = grp
+        new_placement[w] = None
+        return replace(self, placement=tuple(new_placement))
+
+    def with_axis_extent(self, axis: int, logical: int) -> "Pencil":
+        """New pencil with axis ``axis`` resized (r2c/c2r extent change).
+
+        The physical extent is re-padded preserving this pencil's divisibility
+        requirement for that axis (lcm of 1 and its current group)."""
+        m = 1 if self.placement[axis] is None else group_size(self.mesh, self.placement[axis])
+        new_logical = list(self.logical)
+        new_physical = list(self.physical)
+        new_logical[axis] = logical
+        new_physical[axis] = pad_to_multiple(logical, m)
+        return replace(self, logical=tuple(new_logical), physical=tuple(new_physical))
+
+
+def make_pencil(
+    mesh: Mesh,
+    logical: tuple[int, ...],
+    placement: tuple[Group | None, ...],
+    *,
+    divisors: tuple[int, ...] | None = None,
+) -> Pencil:
+    """Build a Pencil, padding each axis to satisfy ``divisors`` (per-axis
+    required divisibility, e.g. the lcm of every subgroup the axis will ever
+    be distributed over during an FFT plan) and its current placement."""
+    physical = []
+    for i, (ext, grp) in enumerate(zip(logical, placement)):
+        need = divisors[i] if divisors is not None else 1
+        if grp is not None:
+            need = math.lcm(need, group_size(mesh, grp))
+        physical.append(pad_to_multiple(ext, need))
+    return Pencil(mesh=mesh, logical=logical, physical=tuple(physical), placement=placement)
+
+
+def pad_global(x: jax.Array, pencil: Pencil) -> jax.Array:
+    """Zero-pad a logical global array to the pencil's physical extents."""
+    pads = [(0, p - l) for l, p in zip(pencil.logical, pencil.physical)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jax.numpy.pad(x, pads)
+
+
+def unpad_global(x: jax.Array, pencil: Pencil) -> jax.Array:
+    """Slice a physical global array back to its logical extents."""
+    if pencil.logical == pencil.physical:
+        return x
+    return x[tuple(slice(0, l) for l in pencil.logical)]

@@ -1,0 +1,135 @@
+"""Global redistribution (the paper's contribution — Sec. 3.3.2, Alg. 2/3).
+
+Two implementations of the v→w exchange of a distributed array:
+
+``method="fused"`` — the paper's method.  One ``lax.all_to_all`` with
+    ``split_axis=v, concat_axis=w``: the strided split/concat description
+    plays the role of MPI subarray datatypes, and the single collective is
+    the analogue of ``MPI_ALLTOALLW``.  No local transpose materializes in
+    user code; XLA:TPU's collective engine performs the strided
+    gather/scatter as part of the exchange.
+
+``method="traditional"`` — what P3DFFT/2DECOMP&FFT/FFTW-MPI do (paper
+    Sec. 3.3.1, Eqs. 15–17): pack chunks contiguously with an explicit local
+    transpose (a materialized copy), run a contiguous all-to-all on the
+    leading chunk axis, then unpack with a second local transpose.  With
+    ``transposed_out=True`` the unpack copy is skipped and the output keeps
+    the permuted chunk-major layout (FFTW's "transposed out", Eq. 19) —
+    callers must handle the layout.
+
+Both operate *per shard* (inside ``shard_map``) via ``exchange_shard`` and
+at the jit level on globally-sharded arrays via ``exchange``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+from repro.core.meshutil import shard_map
+from repro.core.pencil import Group, Pencil, group_names, group_size
+
+Method = str  # "fused" | "traditional"
+
+
+def exchange_shard(
+    block: jax.Array,
+    v: int,
+    w: int,
+    group: Group,
+    *,
+    method: Method = "fused",
+    transposed_out: bool = False,
+) -> jax.Array:
+    """Per-shard v→w exchange over mesh subgroup ``group``.
+
+    Input block: axis ``v`` full (locally complete), axis ``w`` holds this
+    rank's shard.  Output block: axis ``v`` holds this rank's shard, axis
+    ``w`` full.  Mirrors the paper's EXCHANGE(P, A, v, B, w) (Alg. 3).
+    """
+    if v == w:
+        raise ValueError("exchange requires v != w (paper Alg. 3)")
+    names = group_names(group)
+    axis_name = names[0] if len(names) == 1 else names
+
+    if method == "fused":
+        # The paper's method: one generalized all-to-all; the split/concat
+        # axes are the "subarray datatype" description.
+        return lax.all_to_all(block, axis_name, split_axis=v, concat_axis=w, tiled=True)
+
+    if method == "traditional":
+        m = _axis_size(axis_name)
+        nv = block.shape[v]
+        if nv % m != 0:
+            raise ValueError(f"axis v={v} extent {nv} not divisible by group size {m}")
+        # Eq. (15): reshape v -> (m, nv/m); stride change only, free.
+        shape = list(block.shape)
+        shape[v : v + 1] = [m, nv // m]
+        y = block.reshape(shape)
+        # Eq. (16): bring the chunk axis to the front — the materialized
+        # local transpose (the costly pack step traditional codes pay for).
+        y = jnp.moveaxis(y, v, 0)
+        # Eq. (17)+ALLTOALL: contiguous exchange on the leading chunk axis.
+        y = lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        # Unpack: leading chunk q now carries peer q's w-shard (global w order).
+        if transposed_out:
+            # FFTW "transposed out": keep chunk-major layout, caller handles it.
+            return y
+        # Insert the chunk axis just before w (chunk-major == global w order)
+        # and merge (m, w_shard) -> w_full: the second materialized copy.
+        z = jnp.moveaxis(y, 0, w)
+        shape = list(z.shape)
+        shape[w : w + 2] = [shape[w] * shape[w + 1]]
+        return z.reshape(shape)
+
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _axis_size(axis_name) -> int:
+    size = lax.axis_size(axis_name)
+    return int(size)
+
+
+def exchange(
+    x: jax.Array,
+    src: Pencil,
+    v: int,
+    w: int,
+    *,
+    method: Method = "fused",
+) -> tuple[jax.Array, Pencil]:
+    """Jit-level v→w exchange of a globally-sharded array.
+
+    ``x`` must be laid out per ``src`` (axis v aligned... no: axis v aligned
+    on *output*).  Per paper Eq. (20): input has axis w distributed / axis v
+    aligned; output has axis v distributed / axis w aligned.  Returns the
+    redistributed array and its Pencil.
+    """
+    if not src.aligned(v):
+        raise ValueError(f"input axis v={v} must be aligned; placement={src.placement}")
+    group = src.placement[w]
+    if group is None:
+        raise ValueError(f"input axis w={w} must be distributed; placement={src.placement}")
+    dst = src.exchanged(v, w)
+    fn = shard_map(
+        partial(exchange_shard, v=v, w=w, group=group, method=method),
+        mesh=src.mesh,
+        in_specs=src.spec,
+        out_specs=dst.spec,
+        check_vma=False,
+    )
+    return fn(x), dst
+
+
+def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
+    """Bytes each rank sends in the exchange (itemsize excluded): the full
+    local block minus the chunk it keeps.  Used by the roofline model."""
+    import numpy as np
+
+    m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
+    local = int(np.prod(src.local_shape, dtype=np.int64))
+    return local * (m - 1) // m

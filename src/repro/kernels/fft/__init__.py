@@ -1,0 +1,1 @@
+"""Four-step matmul DFT kernel (TPU MXU-native serial FFT)."""

@@ -1,0 +1,148 @@
+"""Jit'd wrappers for the four-step matmul DFT Pallas kernel.
+
+``fft_matmul(x, axis, inverse)``   — complex-to-complex, any axis.
+``rfft_matmul(x, axis)``           — real input, Hermitian-reduced output.
+``irfft_matmul(x, n, axis)``       — inverse of the above.
+
+Factorization policy (``plan_factors``): N = n1·n2 with n1 ≥ n2, both as
+close to √N (and MXU-friendly multiples of 8/128) as possible; prime or tiny
+N degenerates to a single (N,N) DFT matmul.  Inverse transforms use
+ifft(x) = conj(fft(conj(x)))/N so one kernel serves both directions.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fft import ref
+from repro.kernels.fft.kernel import fourstep_pallas_call
+
+_DEFAULT_BLOCK_B = 8
+_SINGLE_MATMUL_MAX = 256  # below this, one (N,N) DFT matmul beats two steps
+
+
+def plan_factors(n: int) -> tuple[int, int]:
+    """Pick (n1, n2), n = n1*n2, n1 >= n2, n1 minimal such — or (n, 1)."""
+    if n <= _SINGLE_MATMUL_MAX:
+        return n, 1
+    best = (n, 1)
+    for n2 in range(int(math.isqrt(n)), 0, -1):
+        if n % n2 == 0:
+            best = (n // n2, n2)
+            break
+    return best
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "axis", "karatsuba", "block_b", "interpret"))
+def fft_matmul(
+    x: jax.Array,
+    *,
+    axis: int = -1,
+    inverse: bool = False,
+    karatsuba: bool = True,
+    block_b: int = _DEFAULT_BLOCK_B,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Complex 1-D DFT along ``axis`` via the four-step Pallas kernel."""
+    x = jnp.asarray(x, jnp.complex64)
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    if inverse:
+        y = fft_matmul(jnp.conj(x), axis=axis, inverse=False, karatsuba=karatsuba,
+                       block_b=block_b, interpret=interpret)
+        return jnp.conj(y) / n
+    xr, xi = jnp.real(x), jnp.imag(x)
+    yr, yi = _fourstep_lastaxis_real(
+        _to_last(xr, axis), _to_last(xi, axis), n,
+        karatsuba=karatsuba, block_b=block_b, interpret=interpret, real_input=False,
+    )
+    return _from_last(jax.lax.complex(yr, yi), axis, x.ndim)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "karatsuba", "block_b", "interpret"))
+def rfft_matmul(
+    x: jax.Array, *, axis: int = -1, karatsuba: bool = True,
+    block_b: int = _DEFAULT_BLOCK_B, interpret: bool | None = None,
+) -> jax.Array:
+    """Real-input DFT; returns the n//2+1 non-redundant bins (rfft)."""
+    x = jnp.asarray(x, jnp.float32)
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    yr, yi = _fourstep_lastaxis_real(
+        _to_last(x, axis), None, n,
+        karatsuba=karatsuba, block_b=block_b, interpret=interpret, real_input=True,
+    )
+    y = jax.lax.complex(yr, yi)[..., : n // 2 + 1]
+    return _from_last(y, axis, x.ndim, resized=True)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "axis", "karatsuba", "block_b", "interpret"))
+def irfft_matmul(
+    x: jax.Array, *, n: int, axis: int = -1, karatsuba: bool = True,
+    block_b: int = _DEFAULT_BLOCK_B, interpret: bool | None = None,
+) -> jax.Array:
+    """Inverse of rfft_matmul: Hermitian-extend, full iDFT, take real part."""
+    x = jnp.asarray(x, jnp.complex64)
+    axis = axis % x.ndim
+    xl = _to_last(x, axis)
+    # Hermitian extension of the reduced spectrum back to length n.
+    tail = jnp.conj(xl[..., 1 : n - n // 2])[..., ::-1]
+    full = jnp.concatenate([xl, tail], axis=-1)
+    y = fft_matmul(full, axis=-1, inverse=True, karatsuba=karatsuba,
+                   block_b=block_b, interpret=interpret)
+    return _from_last(jnp.real(y), axis, x.ndim, resized=True)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _to_last(x, axis):
+    return jnp.moveaxis(x, axis, -1)
+
+
+def _from_last(y, axis, ndim, resized: bool = False):
+    return jnp.moveaxis(y, -1, axis)
+
+
+def _fourstep_lastaxis_real(xr, xi, n, *, karatsuba, block_b, interpret, real_input):
+    """Flatten batch, pad to block multiple, run the kernel, restore shape."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n1, n2 = plan_factors(n)
+    *batch_shape, _ = xr.shape
+    b = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    bb = min(block_b, max(b, 1))
+    b_pad = -(-b // bb) * bb
+
+    def prep(a):
+        a = a.reshape(b, n1, n2)
+        if b_pad != b:
+            a = jnp.pad(a, ((0, b_pad - b), (0, 0), (0, 0)))
+        return a
+
+    xr2 = prep(xr)
+    xi2 = prep(xi) if xi is not None else jnp.zeros_like(xr2)  # ignored when real_input
+
+    f1 = ref.dft_matrix(n1)
+    f2 = ref.dft_matrix(n2)
+    tw = ref.twiddle_matrix(n1, n2)
+    consts = [jnp.asarray(np.real(f1)), jnp.asarray(np.imag(f1)),
+              jnp.asarray(np.real(f2)), jnp.asarray(np.imag(f2)),
+              jnp.asarray(np.real(tw)), jnp.asarray(np.imag(tw))]
+
+    call = fourstep_pallas_call(b_pad, n1, n2, block_b=bb, karatsuba=karatsuba,
+                                real_input=real_input, interpret=interpret)
+    yr, yi = call(xr2, xi2, *consts)
+    # output tile layout (b, k2=n2, k1=n1) flattens row-major to k = k1 + n1*k2
+    yr = yr.reshape(b_pad, n)[:b].reshape(*batch_shape, n)
+    yi = yi.reshape(b_pad, n)[:b].reshape(*batch_shape, n)
+    return yr, yi

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the four-step matmul DFT kernel.
+
+``fft_ref``        — ground truth (jnp.fft).
+``fourstep_ref``   — the four-step algorithm in plain jnp (same math as the
+                     Pallas kernel, no tiling); validates the decomposition
+                     independently of Pallas.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def fft_ref(x: jnp.ndarray, inverse: bool = False) -> jnp.ndarray:
+    """Reference 1-D (i)FFT along the last axis."""
+    return jnp.fft.ifft(x, axis=-1) if inverse else jnp.fft.fft(x, axis=-1)
+
+
+def dft_matrix(n: int, dtype=np.complex64) -> np.ndarray:
+    k = np.arange(n)
+    return np.exp(-2j * np.pi * np.outer(k, k) / n).astype(dtype)
+
+
+def twiddle_matrix(n1: int, n2: int, dtype=np.complex64) -> np.ndarray:
+    """T[k1, n2] = exp(-2πi k1 n2 / (n1 n2))."""
+    k1 = np.arange(n1)
+    n2i = np.arange(n2)
+    return np.exp(-2j * np.pi * np.outer(k1, n2i) / (n1 * n2)).astype(dtype)
+
+
+def fourstep_ref(x: jnp.ndarray, n1: int, n2: int) -> jnp.ndarray:
+    """Four-step DFT along the last axis (length n1*n2) in plain jnp.
+
+    n = n1*N2 + n2 (input row-major (n1, n2)); k = k1 + n1*k2 (output
+    row-major (k2, k1)).  See DESIGN.md §4.
+    """
+    *batch, n = x.shape
+    assert n == n1 * n2, (n, n1, n2)
+    a = x.reshape(*batch, n1, n2)
+    f1 = jnp.asarray(dft_matrix(n1))
+    f2 = jnp.asarray(dft_matrix(n2))
+    tw = jnp.asarray(twiddle_matrix(n1, n2))
+    a1 = jnp.einsum("kn,...nm->...km", f1, a)  # DFT over n1
+    a2 = a1 * tw  # twiddle
+    a3 = jnp.einsum("...km,mj->...kj", a2, f2)  # DFT over n2
+    return jnp.swapaxes(a3, -1, -2).reshape(*batch, n)  # (k2, k1) row-major

@@ -1,0 +1,56 @@
+"""Jit'd wrapper for the causal flash-attention Pallas kernel.
+
+``flash_attention(q, k, v, causal=True)`` takes (B, S, Hq, dh) / (B, S,
+Hkv, dh) GQA tensors; q-head groups are folded onto their kv head so each
+grid row reads one kv tile set.  Blocks default to MXU-aligned (512, 512)
+and clamp to the sequence.  TPU is the target; CPU validates via
+``interpret=True`` against ``ref.attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.kernel import flash_pallas_call
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    pad_q, pad_k = -Sq % bq, -Skv % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:  # padded kv must be masked out: rely on causal (pads are at end)
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        if not causal:
+            raise ValueError("non-causal flash path needs Skv % block_k == 0")
+    # fold GQA: (B, S, Hkv, G, dh) -> (B*Hkv*G, S, dh) sharing kv per group
+    qf = q.reshape(B, Sq + pad_q, Hkv, G, dh).transpose(0, 2, 3, 1, 4)
+    qf = qf.reshape(B * Hkv * G, Sq + pad_q, dh)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv + pad_k, dh),
+                    G, axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv + pad_k, dh),
+                    G, axis=0)
+    call = flash_pallas_call(B * Hq, Sq + pad_q, Skv + pad_k, dh,
+                             block_q=bq, block_k=bk, causal=causal,
+                             dtype=v.dtype, interpret=interpret)
+    o = call(qf, kf, vf)
+    o = o.reshape(B, Hkv, G, Sq + pad_q, dh).transpose(0, 3, 1, 2, 4)
+    return o.reshape(B, Sq + pad_q, Hq, dh)[:, :Sq]

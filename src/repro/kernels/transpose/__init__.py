@@ -1,0 +1,1 @@
+"""Tiled local transpose kernel (traditional-redistribution hot-spot)."""

@@ -1,0 +1,39 @@
+"""Jit'd wrapper for the tiled local-transpose kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.transpose.kernel import transpose01_pallas_call
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "block_b", "interpret"))
+def transpose01(x: jax.Array, *, block_a: int = 8, block_b: int = 8,
+                interpret: bool | None = None) -> jax.Array:
+    """Swap the two leading axes of a rank-3 array via VMEM-tiled copies."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if jnp.iscomplexobj(x):
+        # complex travels as (re, im) planes — same doctrine as the FFT
+        # kernel (no complex VMEM/MXU type)
+        re = transpose01(jnp.real(x), block_a=block_a, block_b=block_b,
+                         interpret=interpret)
+        im = transpose01(jnp.imag(x), block_a=block_a, block_b=block_b,
+                         interpret=interpret)
+        return jax.lax.complex(re, im)
+    a, b, c = x.shape
+    ba, bb = min(block_a, a), min(block_b, b)
+    # pad to tile multiples, run, slice back
+    a2, b2 = -(-a // ba) * ba, -(-b // bb) * bb
+    xp = jnp.pad(x, ((0, a2 - a), (0, b2 - b), (0, 0))) if (a2, b2) != (a, b) else x
+    call = transpose01_pallas_call(a2, b2, c, block_a=ba, block_b=bb,
+                                   dtype=x.dtype, interpret=interpret)
+    y = call(xp)
+    return y[:b, :a] if (a2, b2) != (a, b) else y

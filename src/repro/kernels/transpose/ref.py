@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for the local-transpose kernel."""
+import jax.numpy as jnp
+
+
+def transpose01_ref(x):
+    return jnp.swapaxes(x, 0, 1)

@@ -1,0 +1,267 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or 2x16x16
+multi-pod) from 512 placeholder host devices, constructs the *full*
+published architecture, and lowers + compiles the appropriate step:
+
+    train_4k    -> train_step   (loss + grads + AdamW update, donated state)
+    prefill_32k -> prefill      (32k prompt -> KV/SSM cache + last logits)
+    decode_32k  -> decode_step  (1 token against a 32k cache)
+    long_500k   -> decode_step  (1 token, 512k state; sub-quadratic archs)
+
+Nothing is ever allocated: params/batches/caches enter as
+ShapeDtypeStructs.  The compiled artifact yields ``memory_analysis()``
+(proves the cell fits HBM) and ``cost_analysis()`` (FLOPs/bytes), and the
+post-SPMD HLO text is scanned for collective operand bytes — the three
+roofline terms (EXPERIMENTS.md §Roofline) come from these.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4_9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/artifacts/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.dryrun_lib import (DEFAULT_OUT, _sds, batch_shardings,
+                                     collective_bytes, input_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import active_param_count, param_count
+from repro.models.lm import LM
+from repro.models.sharding import Axes
+from repro.optim import AdamW, OptState
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+FLAG_MAP = {  # --flags shorthand -> PerfFlags field
+    "bf16": {"bf16_attention": True},
+    "tri": {"exact_causal_prefill": True},
+    "dots": {"remat_policy": "dots"},
+    "spres": {"seq_sharded_residual": True},
+    "hmaj": {"hmajor_cache": True},
+}
+
+
+def resolve_flags(opt: bool, flags: str):
+    from repro.models.lm import OPTIMIZED, PerfFlags
+    if opt:
+        return OPTIMIZED
+    kw = {}
+    for f in (flags or "").split(","):
+        f = f.strip()
+        if f:
+            kw.update(FLAG_MAP[f])
+    return PerfFlags(**kw)
+
+
+def build_lm(cfg, mesh, multi_pod: bool, global_batch: int, *, sp_mode="none",
+             opt: bool = False, flags: str = ""):
+    axes = Axes(multi_pod=multi_pod)
+    dp = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    batch_sharded = global_batch % dp == 0 and global_batch >= dp
+    lm = LM(cfg, mesh, axes, q_block=512, xent_chunks=16, sp_mode=sp_mode,
+            batch_sharded=batch_sharded, perf=resolve_flags(opt, flags))
+    return lm, axes
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, sp_mode="none",
+               opt: bool = False, flags: str = "", compile_: bool = True):
+    """Lower (and compile) one cell; returns the result record."""
+    cfg = configs.get(arch)
+    S, B, kind = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    lm, axes = build_lm(cfg, mesh, multi_pod, B, sp_mode=sp_mode, opt=opt,
+                        flags=flags)
+    pshard = lm.param_shardings()
+    aparams = lm.abstract_params()
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            optimizer = AdamW(lr=1e-4)
+            aopt = jax.eval_shape(optimizer.init, aparams)
+            oshard = OptState(NamedSharding(mesh, P()), pshard, pshard)
+            batch, _ = input_specs(cfg, shape_name)
+            bshard = batch_shardings(mesh, axes, batch, B)
+
+            def step_fn(params, opt_state, b):
+                (loss, metrics), grads = jax.value_and_grad(lm.loss, has_aux=True)(params, b)
+                params, opt_state, om = optimizer.update(grads, opt_state, params)
+                return params, opt_state, {"loss": loss}
+
+            jfn = jax.jit(step_fn, in_shardings=(pshard, oshard, bshard),
+                          out_shardings=(pshard, oshard, None),
+                          donate_argnums=(0, 1))
+            lowered = jfn.lower(aparams, aopt, batch)
+        elif kind == "prefill":
+            batch, _ = input_specs(cfg, shape_name)
+            bshard = batch_shardings(mesh, axes, batch, B)
+            acache = jax.eval_shape(lambda p, b: lm.prefill(p, b, max_len=None),
+                                    aparams, batch)[0]
+            cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                  lm.cache_specs(acache),
+                                  is_leaf=lambda x: isinstance(x, P))
+
+            def step_fn(params, b):
+                return lm.prefill(params, b, max_len=None)
+
+            jfn = jax.jit(step_fn, in_shardings=(pshard, bshard),
+                          out_shardings=(cshard, None))
+            lowered = jfn.lower(aparams, batch)
+        else:  # decode
+            small = {"tokens": _sds((B, 8), jnp.int32)}
+            if cfg.family == "vlm":
+                small["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            if cfg.family == "audio":
+                small["frontend"] = _sds((B, 512, cfg.d_model), jnp.bfloat16)
+            acache = jax.eval_shape(lambda p, b: lm.prefill(p, b, max_len=S),
+                                    aparams, small)[0]
+            cshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                  lm.cache_specs(acache),
+                                  is_leaf=lambda x: isinstance(x, P))
+            dp = int(np.prod([mesh.shape[a] for a in axes.dp]))
+            tshard = NamedSharding(mesh, P(axes.dp if B % dp == 0 and B >= dp else None))
+
+            def step_fn(params, cache, token, cur_len):
+                return lm.decode_step(params, cache, token, cur_len)
+
+            jfn = jax.jit(step_fn,
+                          in_shardings=(pshard, cshard, tshard, NamedSharding(mesh, P())),
+                          out_shardings=(cshard, None),
+                          donate_argnums=(1,))
+            lowered = jfn.lower(aparams, acache, _sds((B,), jnp.int32), _sds((), jnp.int32))
+
+        rec = {
+            "arch": arch, "shape": shape_name, "kind": kind,
+            "mesh": "multi" if multi_pod else "single",
+            "chips": int(np.prod(list(mesh.shape.values()))),
+            "seq": S, "batch": B, "sp_mode": sp_mode, "opt": opt,
+            "flags": flags,
+            "params": param_count(cfg), "active_params": active_param_count(cfg),
+            "lower_s": round(time.time() - t0, 1),
+        }
+        if not compile_:
+            return rec, lowered
+
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0 - rec["lower_s"], 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)
+            }
+            if hasattr(ma, "peak_memory_in_bytes"):
+                rec["memory"]["peak_memory_in_bytes"] = int(ma.peak_memory_in_bytes)
+        except Exception as e:  # CPU backend may not expose it
+            rec["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            rec["cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float)) and
+                           k in ("flops", "bytes accessed", "transcendentals",
+                                 "utilization operand 0 {}", "optimal_seconds")}
+            rec["flops_per_device"] = float(ca.get("flops", 0.0))
+            rec["bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
+        except Exception as e:
+            rec["cost"] = {"error": str(e)}
+        hlo_text = compiled.as_text()
+        rec["collective_bytes_per_device"] = collective_bytes(hlo_text)
+        # trip-count-aware accounting (cost_analysis counts while bodies once)
+        from repro.launch.hlo_account import account
+        acct = account(hlo_text)
+        rec["acct"] = {
+            "flops_per_device": acct["flops"],
+            "hbm_bytes_per_device": acct["hbm_bytes"],
+            "collectives_per_device": acct["collectives"],
+            "unknown_trip_whiles": acct["unknown_trip_whiles"],
+        }
+        return rec, compiled
+
+
+def run_cell(arch, shape_name, *, multi_pod, out_dir, sp_mode="none", force=False,
+             opt=False, flags=""):
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    if sp_mode != "none":
+        tag += f"__{sp_mode}"
+    if opt:
+        tag += "__opt"
+    if flags:
+        tag += "__" + flags.replace(",", "-")
+    out = Path(out_dir) / f"{tag}.json"
+    if out.exists() and not force:
+        print(f"[skip] {tag} (cached)")
+        return json.loads(out.read_text())
+    print(f"[run ] {tag} ...", flush=True)
+    rec, _ = lower_cell(arch, shape_name, multi_pod=multi_pod, sp_mode=sp_mode,
+                        opt=opt, flags=flags)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    acct = rec.get("acct", {})
+    coll = acct.get("collectives_per_device", {}).get("total", 0)
+    print(f"[ ok ] {tag}: flops/dev={acct.get('flops_per_device', 0):.3e} "
+          f"hbm/dev={acct.get('hbm_bytes_per_device', 0):.3e}B "
+          f"coll/dev={coll:.3e}B lower={rec['lower_s']}s "
+          f"compile={rec.get('compile_s', '?')}s", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--sp-mode", type=str, default="none")
+    ap.add_argument("--flags", type=str, default="",
+                    help="comma list of bf16,tri,dots,spres (single-flag "
+                         "attribution runs for §Perf)")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable PerfFlags OPTIMIZED (bf16 attention, exact "
+                         "causal prefill, dots remat) — the §Perf variant")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", type=str, default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = configs.all_cells() if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape in cells:
+        for m in meshes:
+            try:
+                run_cell(arch, shape, multi_pod=(m == "multi"), out_dir=args.out,
+                         sp_mode=args.sp_mode, force=args.force, opt=args.opt,
+                         flags=args.flags)
+            except Exception as e:
+                failures.append((arch, shape, m, repr(e)))
+                print(f"[FAIL] {arch}/{shape}/{m}: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", *f)
+        sys.exit(1)
+    print("\nDRY-RUN: all requested cells lowered+compiled OK")
+
+
+if __name__ == "__main__":
+    main()

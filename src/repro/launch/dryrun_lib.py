@@ -1,0 +1,122 @@
+"""Pure dry-run helpers (no env mutation — importable from tests).
+
+``repro.launch.dryrun`` pins the 512-device XLA flag and drives these; unit
+tests import this module directly so the flag never leaks into their
+process.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import active_param_count, param_count
+from repro.models.lm import LM
+from repro.models.sharding import Axes
+from repro.optim import AdamW, OptState
+
+DEFAULT_OUT = "benchmarks/artifacts/dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape_name: str, *, batch_override: int | None = None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    S, B, kind = configs.SHAPES[shape_name]
+    if batch_override is not None:
+        B = batch_override
+    if kind == "train" or kind == "prefill":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "targets": _sds((B, S), jnp.int32),
+            "mask": _sds((B, S), jnp.float32),
+        }
+        if kind == "prefill":
+            batch = {"tokens": batch["tokens"]}
+        if cfg.family == "vlm":
+            batch["frontend"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["frontend"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        return batch, (B, S, kind)
+    # decode: token + cur_len (cache is built separately)
+    return {"token": _sds((B,), jnp.int32), "cur_len": _sds((), jnp.int32)}, (B, S, kind)
+
+
+def batch_shardings(mesh, axes: Axes, batch, global_batch: int):
+    dp = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    b = axes.dp if (global_batch % dp == 0 and global_batch >= dp) else None
+
+    def leaf(x):
+        spec = P(b, *(None,) * (x.ndim - 1))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(leaf, batch)
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte accounting (parse post-SPMD HLO)
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device operand bytes of every collective in the post-SPMD HLO.
+
+    Optimized HLO names operands by reference, so we take the *result*
+    type(s) printed on the instruction and convert to operand ("payload")
+    bytes using the replica-group size G:  all-gather operand = result/G;
+    reduce-scatter operand = result*G; all-reduce / all-to-all /
+    collective-permute operand = result.  ``-done`` halves of async pairs
+    are not double counted.  Returns totals by collective kind.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_types, kind = m.group(1), m.group(2)
+        b = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result_types))
+        g = _GROUPS_RE.search(line)
+        gsize = int(g.group(2)) if g else 1
+        if kind == "all-gather" and gsize:
+            b //= gsize
+        elif kind == "reduce-scatter":
+            b *= gsize
+        out[kind] = out.get(kind, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+

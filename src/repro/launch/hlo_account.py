@@ -1,0 +1,326 @@
+"""Trip-count-aware accounting over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every while body ONCE, which silently
+undercounts scan-over-layers programs by ~L (and the same bug would hit a
+naive collective-bytes grep).  This module parses the HLO text into
+computations, multiplies each computation's contribution by its execution
+count (XLA annotates ``known_trip_count`` on while ops), and produces:
+
+  flops              — 2*K*prod(result) per dot, trip-aware
+  collectives[kind]  — per-device payload bytes per collective kind,
+                       trip-aware (all-gather result/G, reduce-scatter
+                       result*G, others result-sized)
+  hbm_bytes          — streaming-traffic model, trip-aware: for every
+                       top-level instruction, bytes actually read from
+                       operands + bytes actually written.  Slicing
+                       semantics are honoured: ``dynamic-slice`` reads its
+                       *result* size, ``dynamic-update-slice`` reads+writes
+                       its *update* size (the buffer is aliased in place),
+                       and fusions are analysed through their fused
+                       computation — a parameter consumed only by an
+                       internal dynamic-slice contributes the slice size,
+                       a root dynamic-update-slice writes only its update.
+                       Without this, scan-over-layers caches (L, B, S, H, D)
+                       would be charged in full every layer step (~100x
+                       overcount).  This is the roofline *memory* term.
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * conditional branches both counted (upper bound);
+  * dots inside fused computations (rare on CPU) counted with the fusion's
+    multiplier;
+  * whiles without a known_trip_count annotation count once (warned).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\]{},\s]*?))\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED_RE = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)="
+                        r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+                 "while", "conditional", "call", "custom-call", "after-all",
+                 "partition-id", "replica-id", "iota"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _types_bytes(text: str) -> int:
+    return sum(_shape_elems(dims) * _DTYPE_BYTES[t] for t, dims in _SHAPE_RE.findall(text))
+
+
+@dataclass
+class Instr:
+    name: str
+    result: str           # result-type text
+    op: str
+    line: str
+    operands: list[str]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+
+
+def parse(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("(", 1)[0]:
+            m = _COMP_NAME_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm or cur is None:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        om = _OP_RE.match(rhs)
+        if not om:
+            continue
+        result, op = om.group(1), om.group(2)
+        call = rhs[om.end():]
+        depth, end = 1, len(call)
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(call[:end])
+        cur.instrs.append(Instr(name, result, op, line, operands))
+    return comps
+
+
+def _instr_index(comps: dict[str, Computation]) -> dict[str, Instr]:
+    out = {}
+    for c in comps.values():
+        for i in c.instrs:
+            out[i.name] = i
+    return out
+
+
+def _entry_name(comps: dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def execution_counts(comps: dict[str, Computation], hlo: str) -> dict[str, float]:
+    """Multiplier per computation, walking calls from the entry."""
+    entry = _entry_name(comps, hlo)
+    mult: dict[str, float] = {}
+    warn: list[str] = []
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ins in comps[name].instrs:
+            called: list[str] = []
+            for g1, g2 in _CALLED_RE.findall(ins.line):
+                if g1:
+                    called += [c.strip().lstrip("%") for c in g1.split(",")]
+                elif g2:
+                    called.append(g2)
+            if not called:
+                continue
+            child_m = m
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    child_m = m * int(tm.group(1))
+                else:
+                    warn.append(ins.name)
+            for c in called:
+                visit(c, child_m)
+
+    visit(entry, 1.0)
+    if warn:
+        mult["_warn_unknown_trip"] = len(warn)
+    return mult
+
+
+def _slice_aware_bytes(ins: Instr, index: dict[str, Instr],
+                       comps: dict[str, Computation]) -> float:
+    """Read+write HBM bytes for one top-level instruction."""
+    if ins.op == "dynamic-slice":
+        return 2.0 * _types_bytes(ins.result)            # read slice + write
+    if ins.op == "dynamic-update-slice":
+        upd = index.get(ins.operands[1]) if len(ins.operands) > 1 else None
+        b = _types_bytes(upd.result) if upd else _types_bytes(ins.result)
+        return 2.0 * b                                    # read + write update
+    if ins.op == "fusion":
+        called = [g2 for g1, g2 in _CALLED_RE.findall(ins.line) if g2]
+        comp = comps.get(called[0]) if called else None
+        if comp is None:
+            return float(_types_bytes(ins.result))
+        inner_index = {i.name: i for i in comp.instrs}
+        # elementwise-reinterpret ops: data flows through untouched (the
+        # convert itself costs traffic only if its full extent is consumed
+        # downstream, which the terminal-consumer analysis captures)
+        passthru = {"bitcast", "copy", "reshape", "convert", "transpose"}
+
+        def terminal_uses(name: str, seen=None) -> list[tuple[Instr, str]]:
+            """Terminal (non-pass-through) consumers reached from ``name``,
+            paired with the immediate operand name they consume."""
+            seen = seen or set()
+            out: list[tuple[Instr, str]] = []
+            for u in (i for i in comp.instrs if name in i.operands):
+                if u.name in seen:
+                    continue
+                seen.add(u.name)
+                if u.op in passthru:
+                    out += terminal_uses(u.name, seen)
+                else:
+                    out.append((u, name))
+            return out
+
+        total = 0.0
+        # reads: per fusion parameter, honour internal slicing through
+        # pass-through chains (convert(param) -> dus[0] reads nothing, etc.)
+        for p in comp.instrs:
+            if p.op != "parameter":
+                continue
+            uses = terminal_uses(p.name)
+            if not uses:
+                continue
+            if all(u.op == "dynamic-slice" for u, _ in uses):
+                total += max(_types_bytes(u.result) for u, _ in uses)
+            elif all(u.op == "dynamic-update-slice" and u.operands
+                     and u.operands[0] == via for u, via in uses):
+                pass                                      # aliased buffer: no read
+            else:
+                total += _types_bytes(p.result)
+        # writes: peel pass-through wrappers off the root; dus writes update
+        root = next((i for i in comp.instrs if "ROOT" in i.line.split("=")[0]),
+                    comp.instrs[-1] if comp.instrs else None)
+
+        def write_bytes(node: Instr | None, depth=0) -> float:
+            if node is None:
+                return float(_types_bytes(ins.result))
+            if node.op in passthru and node.operands and depth < 8:
+                inner = inner_index.get(node.operands[0])
+                if inner is not None:
+                    return write_bytes(inner, depth + 1)
+            if node.op == "dynamic-update-slice" and len(node.operands) > 1:
+                upd = inner_index.get(node.operands[1])
+                return float(_types_bytes(upd.result if upd else node.result))
+            if node.op == "tuple":
+                return sum(write_bytes(inner_index.get(o), depth + 1)
+                           for o in node.operands)
+            return float(_types_bytes(node.result))
+        total += write_bytes(root)
+        return total
+    # default: read all operands + write result
+    b = float(_types_bytes(ins.result))
+    for o in ins.operands:
+        src = index.get(o)
+        if src is not None:
+            b += _types_bytes(src.result)
+    return b
+
+
+def account(hlo: str) -> dict:
+    comps = parse(hlo)
+    index = _instr_index(comps)
+    mults = execution_counts(comps, hlo)
+
+    flops = 0.0
+    coll: dict[str, float] = {}
+    hbm = 0.0
+    # computations that are fusion bodies (referenced via calls= of a fusion)
+    fusion_bodies: set[str] = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                for g1, g2 in _CALLED_RE.findall(ins.line):
+                    if g2:
+                        fusion_bodies.add(g2)
+
+    for cname, comp in comps.items():
+        m = mults.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        inside_fusion = cname in fusion_bodies
+        for ins in comp.instrs:
+            if ins.op == "fft":
+                # 5 N log2 N per length-N transform over the batch
+                import math as _math
+                mlen = re.search(r"fft_length=\{([0-9,]+)\}", ins.line)
+                sm = _SHAPE_RE.search(ins.result)
+                if mlen and sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    n = 1
+                    for d in mlen.group(1).split(","):
+                        n *= int(d)
+                    total = 1
+                    for d in dims:
+                        total *= d
+                    batch = total / max(n, 1)
+                    flops += m * 5.0 * batch * n * max(_math.log2(max(n, 2)), 1.0)
+            if ins.op == "dot":
+                res = _shape_elems(_SHAPE_RE.search(ins.result).group(2)) \
+                    if _SHAPE_RE.search(ins.result) else 0
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+                k = 1
+                if cm and ins.operands:
+                    lhs = index.get(ins.operands[0])
+                    if lhs is not None:
+                        sm = _SHAPE_RE.search(lhs.result)
+                        if sm:
+                            dims = [int(d) for d in sm.group(2).split(",") if d]
+                            for ci in cm.group(1).split(","):
+                                if ci:
+                                    k *= dims[int(ci)]
+                flops += m * 2.0 * res * k
+            base = ins.op.replace("-start", "")
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                b = _types_bytes(ins.result)
+                g = _GROUPS_RE.search(ins.line)
+                gsize = int(g.group(2)) if g else 1
+                if base == "all-gather":
+                    b //= max(gsize, 1)
+                elif base == "reduce-scatter":
+                    b *= gsize
+                coll[base] = coll.get(base, 0.0) + m * b
+            # streaming HBM-traffic model (top-level only)
+            if not inside_fusion and ins.op not in _SKIP_TRAFFIC \
+                    and not ins.op.endswith("-done"):
+                hbm += m * _slice_aware_bytes(ins, index, comps)
+    coll["total"] = sum(coll.values())
+    return {"flops": flops, "collectives": coll, "hbm_bytes": hbm,
+            "unknown_trip_whiles": int(mults.get("_warn_unknown_trip", 0))}

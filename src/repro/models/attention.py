@@ -1,0 +1,405 @@
+"""Attention: GQA + RoPE, MLA (DeepSeek-V2), blockwise-causal train path,
+sequence-sharded-cache decode path, optional Ulysses sequence parallelism.
+
+Memory doctrine (CPU container lowers the *full* configs, so this must be
+structurally sound at 32k sequence):
+
+* Train/prefill attention is **blockwise over query blocks**: a
+  ``lax.scan`` over q-blocks whose body is ``jax.checkpoint``-ed, so peak
+  live memory is one (B, q_block, H, S) score tile and backward recomputes
+  per-block.  Q-blocks are independent — no cross-step carry, so remat
+  costs only one extra forward of each block.
+* The masked full-KV contraction per q-block computes ~2x the causal
+  minimum FLOPs; the Pallas flash kernel (kernels/flash) with true
+  triangular block skip is the optimized path (§Perf).
+* Decode attends a (B, S_cache, Hkv, dh) cache whose **sequence axis is
+  TP-sharded** (flash-decoding layout).  Softmax over the sharded axis is
+  expressed in plain jnp; GSPMD lowers the max/sum/PV reductions to
+  all-reduces over the model axis — the collective-fused analogue of the
+  paper's "let the communication layer do the rearrangement".
+
+Ulysses SP (``ulysses_attention``) is the paper's v->w exchange applied to
+attention: seq-sharded activations are redistributed to head-sharded via one
+fused ``lax.all_to_all`` (split heads / concat sequence) and back — the same
+primitive as ``repro.core.redistribute.exchange_shard``.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_rope
+
+_NEG_INF = -1e30
+
+
+def _dots(q_like, k_like, eq, *, bf16_compute: bool):
+    """Score/PV contraction helper: baseline casts operands to fp32
+    (materializes fp32 copies — visible in the HLO traffic); the optimized
+    path keeps operands bf16 and accumulates in fp32 on the MXU
+    (preferred_element_type), which is the TPU-native mixed precision."""
+    if bf16_compute:
+        return jnp.einsum(eq, q_like, k_like, preferred_element_type=jnp.float32)
+    return jnp.einsum(eq, q_like.astype(jnp.float32), k_like.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, Hq, dh)
+    k: jax.Array,  # (B, Skv, Hkv, dh)
+    v: jax.Array,  # (B, Skv, Hkv, dv)
+    *,
+    causal: bool,
+    q_block: int = 512,
+    q_offset: int = 0,
+    kv_len: jax.Array | None = None,  # optional valid-prefix length of k/v
+    bf16_compute: bool = False,
+) -> jax.Array:
+    """Numerically-safe blockwise attention; scan over q blocks, remat body.
+
+    ``q_offset`` is the absolute position of q[0] (decode/prefill-continue).
+    ``kv_len`` masks the KV suffix (padded caches).  Returns (B, Sq, Hq, dv).
+    ``bf16_compute``: keep QK^T/PV operands bf16 with fp32 accumulation
+    (optimized path; baseline materializes fp32 copies).
+    """
+    B, Sq, Hq, dh = q.shape
+    _, Skv, Hkv, dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    qb = min(q_block, Sq)
+    if Sq % qb != 0:  # pad q to a block multiple (logits for pads discarded)
+        pad = -Sq % qb
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = blockwise_attention(q, k, v, causal=causal, q_block=qb,
+                                  q_offset=q_offset, kv_len=kv_len,
+                                  bf16_compute=bf16_compute)
+        return out[:, :Sq]
+    nq = Sq // qb
+    scale = 1.0 / math.sqrt(dh)
+    kv_pos = jnp.arange(Skv)
+
+    qs = jnp.moveaxis(q.reshape(B, nq, qb, Hkv, G, dh), 1, 0)  # (nq,B,qb,Hkv,G,dh)
+
+    @jax.checkpoint
+    def body(_, xs):
+        qi, i = xs
+        # scores: (B, Hkv, G, qb, Skv), fp32 accumulation either way
+        s = _dots((qi * scale).astype(qi.dtype), k, "bqhgd,bkhd->bhgqk",
+                  bf16_compute=bf16_compute)
+        mask = jnp.ones((qb, Skv), dtype=bool)
+        if causal:
+            q_pos = q_offset + i * qb + jnp.arange(qb)
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jax.lax.stop_gradient(m))
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        p = p / jnp.maximum(l, 1e-30)
+        if bf16_compute:
+            p = p.astype(v.dtype)
+        o = _dots(p, v, "bhgqk,bkhd->bqhgd", bf16_compute=bf16_compute)
+        return (), o.reshape(B, qb, Hq, dv).astype(v.dtype)
+
+    _, outs = lax.scan(body, (), (qs, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, dv)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, dh)
+    k_cache: jax.Array,  # (B, S_cache, Hkv, dh)  — seq axis may be TP-sharded
+    v_cache: jax.Array,  # (B, S_cache, Hkv, dv)
+    cur_len: jax.Array,  # valid cache length (scalar int32)
+    *,
+    bf16_compute: bool = False,
+    layout: str = "bskd",  # "bskd" (B,S,Hkv,dh) | "bhsd" (B,Hkv,S,dh)
+) -> jax.Array:
+    """Single-token attention over a (possibly sequence-sharded) cache.
+
+    Plain-jnp online-softmax form: GSPMD turns the max/sum/PV contractions
+    over the sharded seq axis into all-reduces over the model axis, which is
+    exactly the flash-decoding partial-merge schedule.  ``bf16_compute``
+    avoids materializing an fp32 copy of the whole cache (§Perf).
+    """
+    B, _, Hq, dh = q.shape
+    hmajor = layout == "bhsd"
+    Hkv = k_cache.shape[1] if hmajor else k_cache.shape[2]
+    S_cache = k_cache.shape[2] if hmajor else k_cache.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qq = (q.reshape(B, 1, Hkv, G, dh) * scale).astype(q.dtype)
+    # head-major (B, Hkv, S, dh) caches contract without a layout copy —
+    # the bshd layout costs a materialized (B, Hkv, dh, S) transpose per
+    # layer per step (§Perf: llava decode_32k iteration 2)
+    k_eq = "bqhgd,bhkd->bhgqk" if hmajor else "bqhgd,bkhd->bhgqk"
+    v_eq = "bhgqk,bhkd->bqhgd" if hmajor else "bhgqk,bkhd->bqhgd"
+    s = _dots(qq, k_cache, k_eq, bf16_compute=bf16_compute)
+    mask = jnp.arange(S_cache)[None, None, None, None, :] < cur_len
+    s = jnp.where(mask, s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / l
+    if bf16_compute:
+        p = p.astype(v_cache.dtype)
+    o = _dots(p, v_cache, v_eq, bf16_compute=bf16_compute)
+    return o.reshape(B, 1, Hq, -1).astype(v_cache.dtype)
+
+
+def triangular_causal_attention(
+    q: jax.Array,  # (B, S, Hq, dh)
+    k: jax.Array,  # (B, S, Hkv, dh)
+    v: jax.Array,  # (B, S, Hkv, dv)
+    *,
+    q_block: int = 512,
+    bf16_compute: bool = True,
+) -> jax.Array:
+    """Exact-FLOPs causal attention: only the nq(nq+1)/2 lower-triangular
+    (q-block, kv-block) tiles are contracted, vs blockwise_attention's
+    masked full-KV rectangles (~2x the causal minimum at large S).
+
+    Forward-only by design (the scan carries the output accumulator, which
+    is hostile to reverse-mode remat) — used on the *serving* prefill path
+    where there is no backward.  This is the XLA-expressible analogue of a
+    Pallas flash kernel's ``pl.when`` triangular block skip (§Perf).
+    """
+    B, S, Hq, dh = q.shape
+    Hkv, dv = k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    qb = min(q_block, S)
+    pad = -S % qb
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nq = Sp // qb
+    scale = 1.0 / math.sqrt(dh)
+    qs = (q.reshape(B, nq, qb, Hkv, G, dh) * scale).astype(q.dtype)
+    ks = k.reshape(B, nq, qb, Hkv, dh)
+    vs = v.reshape(B, nq, qb, Hkv, dv)
+    # triangular tile list (static)
+    import numpy as _np
+    pi = _np.concatenate([_np.full(i + 1, i) for i in range(nq)]).astype(_np.int32)
+    pj = _np.concatenate([_np.arange(i + 1) for i in range(nq)]).astype(_np.int32)
+
+    o0 = jnp.zeros((B, nq, qb, Hkv, G, dv), jnp.float32)
+    m0 = jnp.full((B, nq, qb, Hkv, G), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, qb, Hkv, G), jnp.float32)
+    pos = jnp.arange(qb)
+
+    def body(carry, ij):
+        o, mstat, lstat = carry
+        i, j = ij
+        qi = lax.dynamic_index_in_dim(qs, i, axis=1, keepdims=False)
+        kj = lax.dynamic_index_in_dim(ks, j, axis=1, keepdims=False)
+        vj = lax.dynamic_index_in_dim(vs, j, axis=1, keepdims=False)
+        s = _dots(qi, kj, "bqhgd,bkhd->bqhgk", bf16_compute=bf16_compute)
+        diag = i == j
+        mask = jnp.where(diag, pos[:, None] >= pos[None, :], True)
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_old = lax.dynamic_index_in_dim(mstat, i, axis=1, keepdims=False)
+        l_old = lax.dynamic_index_in_dim(lstat, i, axis=1, keepdims=False)
+        o_old = lax.dynamic_index_in_dim(o, i, axis=1, keepdims=False)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_old - m_new)
+        l_new = l_old * alpha + jnp.sum(p, axis=-1)
+        if bf16_compute:
+            p = p.astype(v.dtype)
+        pv = _dots(p, vj, "bqhgk,bkhd->bqhgd", bf16_compute=bf16_compute)
+        o_new = o_old * alpha[..., None] + pv
+        upd = lambda buf, val: lax.dynamic_update_index_in_dim(buf, val, i, axis=1)
+        return (upd(o, o_new), upd(mstat, m_new), upd(lstat, l_new)), None
+
+    (o, _, l), _ = lax.scan(body, (o0, m0, l0),
+                            (jnp.asarray(pi), jnp.asarray(pj)))
+    out = (o / jnp.maximum(l[..., None], 1e-30)).reshape(B, Sp, Hq, dv)
+    return out[:, :S].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, d: int, n_heads: int, n_kv: int, head_dim: int, *,
+             qkv_bias: bool, dtype=jnp.bfloat16):
+    from repro.models.layers import dense_init
+
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def gqa_qkv(p, x, *, n_heads: int, n_kv: int, head_dim: int,
+            positions, rope_theta: float):
+    """Project + RoPE.  x: (B, S, D) -> q (B,S,Hq,dh), k/v (B,S,Hkv,dh)."""
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None], rope_theta).swapaxes(1, 2)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None], rope_theta).swapaxes(1, 2)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, d: int, n_heads: int, mla, dtype=jnp.bfloat16):
+    from repro.models.layers import dense_init
+
+    ks = jax.random.split(key, 5)
+    dn, dr, r, dv = mla.qk_nope_dim, mla.qk_rope_dim, mla.kv_lora_rank, mla.v_head_dim
+    return {
+        "wq": dense_init(ks[0], d, n_heads * (dn + dr), dtype),
+        "w_dkv": dense_init(ks[1], d, r + dr, dtype),
+        "kv_norm": jnp.ones((r,), jnp.float32),
+        "w_uk": dense_init(ks[2], r, n_heads * dn, dtype),
+        "w_uv": dense_init(ks[3], r, n_heads * dv, dtype),
+        "wo": dense_init(ks[4], n_heads * dv, d, dtype),
+    }
+
+
+def mla_latents(p, x, *, mla, positions, rope_theta: float):
+    """x -> (c_kv, k_rope): the compressed KV (what MLA caches)."""
+    from repro.models.layers import rmsnorm
+
+    dr, r = mla.qk_rope_dim, mla.kv_lora_rank
+    a = x @ p["w_dkv"]  # (B, S, r + dr)
+    c_kv = rmsnorm(a[..., :r], p["kv_norm"], 1e-6)
+    k_rope = a[..., r:].reshape(*x.shape[:2], 1, dr)
+    k_rope = apply_rope(k_rope.swapaxes(1, 2), positions[:, None], rope_theta).swapaxes(1, 2)
+    return c_kv, k_rope
+
+
+def mla_queries(p, x, *, n_heads: int, mla, positions, rope_theta: float):
+    dn, dr = mla.qk_nope_dim, mla.qk_rope_dim
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), positions[:, None], rope_theta).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def mla_expand_kv(p, c_kv, k_rope, *, n_heads: int, mla):
+    """Decompress latents to per-head K (nope||rope) and V."""
+    dn, dv = mla.qk_nope_dim, mla.v_head_dim
+    B, S, _ = c_kv.shape
+    k_nope = (c_kv.astype(p["w_uk"].dtype) @ p["w_uk"]).reshape(B, S, n_heads, dn)
+    v = (c_kv.astype(p["w_uv"].dtype) @ p["w_uv"]).reshape(B, S, n_heads, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, n_heads, k_rope.shape[-1]))], -1)
+    return k, v
+
+
+def mla_attention_train(p, x, *, n_heads: int, mla, positions, rope_theta: float,
+                        q_block: int = 512, bf16_compute: bool = False):
+    c_kv, k_rope = mla_latents(p, x, mla=mla, positions=positions, rope_theta=rope_theta)
+    q_nope, q_rope = mla_queries(p, x, n_heads=n_heads, mla=mla,
+                                 positions=positions, rope_theta=rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k, v = mla_expand_kv(p, c_kv, k_rope, n_heads=n_heads, mla=mla)
+    o = blockwise_attention(q, k, v, causal=True, q_block=q_block,
+                            bf16_compute=bf16_compute)
+    return o.reshape(*x.shape[:2], -1) @ p["wo"]
+
+
+def mla_decode_absorbed(p, x, cache_ckv, cache_krope, cur_len, *, n_heads: int,
+                        mla, positions, rope_theta: float,
+                        bf16_compute: bool = False):
+    """Weight-absorbed MLA decode: attention runs in the latent space.
+
+    Scores = q_nope W_uk^T c_kv + q_rope k_rope; output = (P c_kv) W_uv.
+    Never expands K/V for the whole cache — the MLA serving optimization
+    (cache stays (B, S, r + dr) instead of (B, S, H, dn+dr+dv)).
+    """
+    dn, dr, r, dv = mla.qk_nope_dim, mla.qk_rope_dim, mla.kv_lora_rank, mla.v_head_dim
+    B = x.shape[0]
+    q_nope, q_rope = mla_queries(p, x, n_heads=n_heads, mla=mla,
+                                 positions=positions, rope_theta=rope_theta)
+    # absorb: q_lat[b,1,h,r] = q_nope[b,1,h,dn] @ W_uk[r, h*dn] (per head)
+    w_uk = p["w_uk"].reshape(r, n_heads, dn)
+    q_lat = _dots(q_nope, w_uk, "bqhd,rhd->bqhr", bf16_compute=bf16_compute)
+    scale = 1.0 / math.sqrt(dn + dr)
+    if bf16_compute:
+        q_lat = q_lat.astype(x.dtype)
+    s = _dots(q_lat, cache_ckv, "bqhr,bkr->bhqk", bf16_compute=bf16_compute)
+    s = s + _dots(q_rope, cache_krope, "bqhd,bkd->bhqk", bf16_compute=bf16_compute)
+    s = s * scale
+    mask = jnp.arange(cache_ckv.shape[1])[None, None, None, :] < cur_len
+    s = jnp.where(mask, s, _NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    if bf16_compute:
+        p_attn = p_attn.astype(x.dtype)
+    o_lat = _dots(p_attn, cache_ckv, "bhqk,bkr->bqhr", bf16_compute=bf16_compute)
+    w_uv = p["w_uv"].reshape(r, n_heads, dv)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat.astype(jnp.float32),
+                   w_uv.astype(jnp.float32))
+    return (o.reshape(B, 1, n_heads * dv).astype(x.dtype)) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Ulysses sequence parallelism (the paper's exchange applied to attention)
+# ---------------------------------------------------------------------------
+
+
+def ulysses_attention(q, k, v, mesh, *, tp_axis: str, causal: bool,
+                      q_block: int = 512):
+    """Seq-sharded -> head-sharded -> seq-sharded via two fused all-to-alls.
+
+    q/k/v are (B, S, H, dh) jit-level arrays whose S axis is sharded over
+    ``tp_axis``.  Requires Hq % tp == 0; KV heads are replicated up to tp
+    first (the standard Ulysses-GQA adaptation).  The all-to-alls are the
+    identical primitive to ``repro.core.redistribute.exchange_shard`` —
+    the paper's fused redistribution reused verbatim (DESIGN.md §3).
+    """
+    tp = mesh.shape[tp_axis]
+    Hq, Hkv = q.shape[2], k.shape[2]
+    if Hq % tp != 0:
+        raise ValueError(f"ulysses needs heads {Hq} % tp {tp} == 0")
+    if Hkv % tp != 0:  # replicate kv heads up to tp
+        rep = -(-tp // Hkv)
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    def inner(ql, kl, vl):
+        # (B, S/tp, H, dh) -> (B, S, H/tp, dh): split heads, concat seq
+        a2a = partial(lax.all_to_all, axis_name=tp_axis, split_axis=2,
+                      concat_axis=1, tiled=True)
+        ql, kl, vl = a2a(ql), a2a(kl), a2a(vl)
+        o = blockwise_attention(ql, kl, vl, causal=causal, q_block=q_block)
+        return lax.all_to_all(o, tp_axis, split_axis=1, concat_axis=2, tiled=True)
+
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(None, tp_axis, None, None)
+    fn = jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                       out_specs=spec, check_vma=False)
+    return fn(q, k, v)

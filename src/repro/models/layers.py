@@ -1,0 +1,117 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings, chunked loss.
+
+Everything is a pure function over param pytrees (nested dicts).  Weight
+init uses truncated-normal fan-in scaling.  Compute dtype is bf16 with fp32
+accumulation/softmax; norms run in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -3, 3, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, Dh); positions: (..., T) int32. Rotates pairs (even, odd)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, kind: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, ff, dtype),
+            "w_up": dense_init(ks[1], d, ff, dtype),
+            "w_down": dense_init(ks[2], ff, d, dtype),
+        }
+    return {"w_up": dense_init(ks[0], d, ff, dtype), "w_down": dense_init(ks[1], ff, d, dtype)}
+
+
+def mlp_apply(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["w_up"]))
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"])
+    else:
+        raise ValueError(kind)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked softmax cross-entropy (never materializes (B,T,V) at once)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.checkpoint, static_argnums=())
+def _xent_chunk(h, w_out, targets, mask):
+    logits = (h @ w_out).astype(jnp.float32)  # (B, Tc, V)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = (logz - gold) * mask
+    return jnp.sum(loss), jnp.sum(mask)
+
+
+def chunked_xent(h, w_out, targets, mask, n_chunks: int):
+    """Mean token cross-entropy, scanning over T chunks (bwd recomputes
+    per-chunk logits — remat keeps peak memory at one (B,Tc,V) tile)."""
+    b, t, d = h.shape
+    assert t % n_chunks == 0, (t, n_chunks)
+    tc = t // n_chunks
+    hs = h.reshape(b, n_chunks, tc, d).swapaxes(0, 1)
+    ts = targets.reshape(b, n_chunks, tc).swapaxes(0, 1)
+    ms = mask.reshape(b, n_chunks, tc).swapaxes(0, 1)
+
+    def body(acc, xs):
+        hc, tg, mk = xs
+        s, n = _xent_chunk(hc, w_out, tg, mk)
+        return (acc[0] + s, acc[1] + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,747 @@
+"""Unified LM covering all assigned families.
+
+families: dense | moe | audio (enc-dec backbone) | vlm (backbone+stub
+frontend) | hybrid (Mamba2 + shared attention) | ssm (pure Mamba1).
+
+Structure doctrine:
+* params are pure pytrees; per-layer params are **stacked** on a leading L
+  axis and the layer stack runs under ``lax.scan`` with a ``jax.checkpoint``
+  -ed body (one compiled layer body; per-layer remat).
+* every hot activation gets a ``with_sharding_constraint``; params carry
+  NamedSharding via ``param_specs()`` (FSDP over "data", TP over "model" —
+  see models/sharding.py).
+* decode caches: attention KV is **sequence-sharded over TP**
+  (flash-decoding layout); SSM states are d_inner-sharded.
+
+Entry points (all pure, all jit-able):
+  ``loss(params, batch)``                       -> scalar    (train)
+  ``prefill(params, batch)``                    -> (cache, logits_last)
+  ``decode_step(params, cache, token, cur_len)``-> (cache, logits)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ArchConfig
+from repro.models.layers import (chunked_xent, dense_init, layernorm, mlp_apply,
+                                 mlp_init, rmsnorm)
+from repro.models.sharding import Axes
+
+
+def _norm_init(cfg, d):
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def _norm_apply(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    """Beyond-baseline optimizations (EXPERIMENTS.md §Perf).  Defaults are
+    the paper-faithful/naive baseline; the dry-run's --opt flag enables all.
+
+    bf16_attention       — QK^T/PV contract bf16 operands with fp32
+                           accumulation instead of materializing fp32
+                           copies of K/V (and, on decode, of the whole
+                           cache).
+    exact_causal_prefill — serving prefill uses triangular-tile attention
+                           (exact causal FLOPs) instead of masked full-KV.
+    remat_policy         — "full": recompute everything in backward;
+                           "dots": save matmul outputs, recompute the rest
+                           (jax dots_with_no_batch_dims_saveable).
+    """
+
+    bf16_attention: bool = False
+    exact_causal_prefill: bool = False
+    remat_policy: str = "full"
+    # head-major (B, Hkv, S, dh) KV cache: decode contracts without the
+    # per-layer-per-step layout transpose the (B, S, Hkv, dh) layout costs
+    hmajor_cache: bool = False
+    # Megatron-SP hypothesis: keep the residual stream sequence-sharded over
+    # TP between blocks so activation collectives become bf16 reduce-scatter/
+    # all-gather pairs instead of fp32 all-reduces (§Perf iteration 3).
+    seq_sharded_residual: bool = False
+
+
+OPTIMIZED = PerfFlags(bf16_attention=True, exact_causal_prefill=True,
+                      remat_policy="dots", hmajor_cache=True)
+
+
+class LM:
+    """One model = (ArchConfig, Mesh, Axes).  Mesh may be a trivial (1,1)."""
+
+    def __init__(self, cfg: ArchConfig, mesh: Mesh, axes: Axes, *,
+                 q_block: int = 512, xent_chunks: int = 8,
+                 sp_mode: str = "none", batch_sharded: bool = True,
+                 perf: PerfFlags = PerfFlags(), local_mode: bool = False):
+        self.cfg, self.mesh, self.axes = cfg, mesh, axes
+        self.q_block, self.xent_chunks = q_block, xent_chunks
+        self.sp_mode = sp_mode
+        self.batch_sharded = batch_sharded
+        self.perf = perf
+        # local_mode: run as a pure per-shard function (no sharding
+        # constraints, no nested shard_map) — the explicit-DP/compressed-
+        # gradient path wraps the whole loss in its own shard_map.
+        self.local_mode = local_mode
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.tp = mesh.shape[axes.tp]
+        # vocab padded so embed/lm_head shard evenly on any production mesh
+        # (MaxText-style; targets always index the true vocab prefix)
+        gran = max(self.tp * mesh.shape[axes.fsdp], 1)
+        self.vocab_padded = -(-cfg.vocab // gran) * gran
+
+    # -- helpers -------------------------------------------------------------
+
+    def cs(self, x, spec: P):
+        if self.local_mode:
+            return x
+        return lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def _ckpt(self, f):
+        if self.perf.remat_policy == "dots":
+            return jax.checkpoint(
+                f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(f)
+
+    @property
+    def head_dim(self):
+        return self.cfg.resolved_head_dim
+
+    # =========================================================================
+    # Parameter init
+    # =========================================================================
+
+    def init_params(self, key):
+        cfg = self.cfg
+        d, dt = cfg.d_model, self.dtype
+        ks = jax.random.split(key, 8)
+        params = {"embed": dense_init(ks[0], self.vocab_padded, d, dt, scale=1.0),
+                  "final_norm": _norm_init(cfg, d)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], d, self.vocab_padded, dt)
+
+        def stacked(init_fn, n, key):
+            return jax.vmap(init_fn)(jax.random.split(key, n))
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+            n_rest = cfg.n_layers - n_dense
+            params["blocks"] = stacked(lambda k: self._block_init(k, moe=bool(cfg.moe)),
+                                       n_rest, ks[2])
+            if n_dense:
+                ff0 = cfg.moe.dense_ff or cfg.d_ff
+                params["dense0"] = stacked(lambda k: self._block_init(k, moe=False, ff=ff0),
+                                           n_dense, ks[3])
+        elif cfg.family == "audio":
+            params["enc_blocks"] = stacked(lambda k: self._block_init(k, moe=False),
+                                           cfg.n_encoder_layers, ks[2])
+            params["enc_norm"] = _norm_init(cfg, d)
+            params["dec_blocks"] = stacked(lambda k: self._block_init(k, moe=False, cross=True),
+                                           cfg.n_layers, ks[3])
+        elif cfg.family == "ssm":
+            params["blocks"] = stacked(
+                lambda k: {"ln": _norm_init(cfg, d),
+                           "mamba": ssm_mod.mamba1_init(k, d, cfg.ssm, dt)},
+                cfg.n_layers, ks[2])
+        elif cfg.family == "hybrid":
+            n_groups = cfg.n_layers // cfg.attn_every
+            params["blocks"] = stacked(
+                lambda k: jax.vmap(lambda k2: {
+                    "ln": _norm_init(cfg, d),
+                    "mamba": ssm_mod.mamba2_init(k2, d, cfg.ssm, dt)})(
+                        jax.random.split(k, cfg.attn_every)),
+                n_groups, ks[2])
+            # ONE shared attention+MLP block (zamba2), input = concat(x, emb0)
+            kk = jax.random.split(ks[3], 4)
+            params["shared"] = {
+                "w_in": dense_init(kk[0], 2 * d, d, dt),
+                "ln1": _norm_init(cfg, d), "ln2": _norm_init(cfg, d),
+                "attn": attn.gqa_init(kk[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                      self.head_dim, qkv_bias=cfg.qkv_bias, dtype=dt),
+                "mlp": mlp_init(kk[2], d, cfg.d_ff, cfg.mlp, dt),
+            }
+        else:
+            raise ValueError(cfg.family)
+        return params
+
+    def _block_init(self, key, *, moe: bool, ff: int | None = None, cross: bool = False):
+        cfg = self.cfg
+        d, dt = cfg.d_model, self.dtype
+        ks = jax.random.split(key, 6)
+        if cfg.mla is not None:
+            a = attn.mla_init(ks[0], d, cfg.n_heads, cfg.mla, dt)
+        else:
+            a = attn.gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, self.head_dim,
+                              qkv_bias=cfg.qkv_bias, dtype=dt)
+        p = {"ln1": _norm_init(cfg, d), "ln2": _norm_init(cfg, d), "attn": a}
+        if cross:
+            p["ln_x"] = _norm_init(cfg, d)
+            p["cross"] = attn.gqa_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                       self.head_dim, qkv_bias=False, dtype=dt)
+        if moe:
+            p["moe"] = moe_mod.moe_init(ks[2], d, cfg.moe, cfg.mlp, dt)
+        else:
+            p["mlp"] = mlp_init(ks[2], d, ff or cfg.d_ff, cfg.mlp, dt)
+        return p
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init_params, jax.random.PRNGKey(0))
+
+    # =========================================================================
+    # Sharding specs
+    # =========================================================================
+
+    def param_specs(self):
+        ax = self.axes
+        fsdp, tp = ax.fsdp, ax.tp
+
+        def block_spec(p, stack_dims: int = 1):
+            """Spec for one (stacked) block dict by leaf name and rank."""
+            s = (None,) * stack_dims
+
+            def leaf(path, x):
+                name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+                r = x.ndim - stack_dims
+                col = P(*s, fsdp, tp)
+                row = P(*s, tp, fsdp)
+                repl_in = P(*s, fsdp, None)
+                if name in ("wq", "w_gate", "w_up", "in_proj"):
+                    return col
+                if name in ("wo", "w_down", "out_proj", "dt_proj"):
+                    return row
+                if name in ("wk", "wv", "w_dkv", "x_proj"):
+                    # kv-head / latent dims stay unsharded on TP (kv < tp)
+                    return repl_in if r == 2 else P(*s, None)
+                if name in ("w_uk", "w_uv"):
+                    return P(*s, None, tp)
+                if name == "router":
+                    return repl_in
+                if name in ("bq", "w_in"):
+                    return P(*s, fsdp, tp) if r == 2 else P(*s, tp)
+                if name in ("A_log", "D", "conv_w", "conv_b", "dt_bias", "norm_w"):
+                    return P(*s, *(None,) * r)
+                if name in ("w", "b", "kv_norm", "bk", "bv"):
+                    return P(*s, *(None,) * r)
+                return P(*s, *(None,) * r)
+
+            return jax.tree_util.tree_map_with_path(leaf, p)
+
+        aparams = self.abstract_params()
+        specs = {}
+        for k, v in aparams.items():
+            if k == "embed":
+                specs[k] = P(tp, fsdp)
+            elif k == "lm_head":
+                specs[k] = P(fsdp, tp)
+            elif k in ("final_norm", "enc_norm"):
+                specs[k] = jax.tree.map(lambda _: P(), v)
+            elif k == "shared":
+                specs[k] = block_spec(v, stack_dims=0)
+            elif k == "blocks" and self.cfg.family == "hybrid":
+                specs[k] = block_spec(v, stack_dims=2)
+            else:  # blocks / dense0 / enc_blocks / dec_blocks
+                sp = block_spec(v, stack_dims=1)
+                if self.cfg.family == "moe" and k == "blocks":
+                    # expert-stacked weights: (L, E, D, F) -> experts on TP
+                    for name in ("w_gate", "w_up", "w_down"):
+                        if name in sp["moe"]:
+                            sp["moe"][name] = P(None, tp, fsdp, None)
+                specs[k] = sp
+        return specs
+
+    def param_shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), self.param_specs(),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    # =========================================================================
+    # Forward (train)
+    # =========================================================================
+
+    def _embed(self, params, tokens):
+        e = jnp.take(params["embed"], tokens, axis=0)
+        return e.astype(self.dtype)
+
+    def _logits_loss(self, params, h, targets, mask):
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        h = _norm_apply(self.cfg, params["final_norm"], h)
+        return chunked_xent(h, w, targets, mask, self.xent_chunks)
+
+    def _attn_block(self, p, x, positions, *, causal=True, kv=None):
+        """Pre-norm attention sub-block (GQA or MLA).  kv: cross-attn source."""
+        cfg = self.cfg
+        h = _norm_apply(cfg, p["ln1"] if kv is None else p["ln_x"], x)
+        if cfg.mla is not None and kv is None:
+            ap = p["attn"]
+            return x + attn.mla_attention_train(
+                ap, h, n_heads=cfg.n_heads, mla=cfg.mla, positions=positions,
+                rope_theta=cfg.rope_theta, q_block=self.q_block,
+                bf16_compute=self.perf.bf16_attention)
+        ap = p["attn"] if kv is None else p["cross"]
+        if kv is None:
+            q, k, v = attn.gqa_qkv(ap, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                   head_dim=self.head_dim, positions=positions,
+                                   rope_theta=cfg.rope_theta)
+        else:
+            qkv = attn.gqa_qkv(ap, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                               head_dim=self.head_dim, positions=positions,
+                               rope_theta=cfg.rope_theta)
+            q = qkv[0]
+            kv_pos = jnp.broadcast_to(jnp.arange(kv.shape[1], dtype=jnp.int32),
+                                      kv.shape[:2])
+            _, k, v = attn.gqa_qkv(ap, kv, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                   head_dim=self.head_dim, positions=kv_pos,
+                                   rope_theta=cfg.rope_theta)
+        if self.sp_mode == "ulysses" and kv is None and cfg.n_heads % self.tp == 0:
+            o = attn.ulysses_attention(q, k, v, self.mesh, tp_axis=self.axes.tp,
+                                       causal=causal, q_block=self.q_block)
+        else:
+            q = self.cs(q, self.axes.act_heads())
+            o = attn.blockwise_attention(q, k, v, causal=causal, q_block=self.q_block,
+                                         bf16_compute=self.perf.bf16_attention)
+        B, S = x.shape[:2]
+        return x + o.reshape(B, S, -1) @ (p["attn"] if kv is None else p["cross"])["wo"]
+
+    def _ffn_block(self, p, x, *, use_moe: bool, decode: bool = False):
+        cfg = self.cfg
+        h = _norm_apply(cfg, p["ln2"], x)
+        if not use_moe:
+            return x + mlp_apply(p["mlp"], h, cfg.mlp), 0.0, 0.0
+        if self.local_mode:
+            y, aux, z = moe_mod.moe_apply_dense(p["moe"], h, cfg=cfg.moe,
+                                                mlp_kind=cfg.mlp)
+            return x + y, aux, z
+        S = h.shape[1]
+        fn = moe_mod.moe_apply_local if (decode or S % self.tp != 0 or S < self.tp) \
+            else moe_mod.moe_apply_a2a
+        y, aux, z = fn(p["moe"], h, self.mesh, cfg=cfg.moe, mlp_kind=cfg.mlp,
+                       dp_axes=self.axes.dp, ep_axis=self.axes.tp,
+                       batch_sharded=self.batch_sharded)
+        return x + y, aux, z
+
+    def _decoder_stack(self, params, x, positions, *, enc_out=None):
+        """Scan the (dense/moe/audio-decoder) layer stack over x."""
+        cfg = self.cfg
+        use_moe = cfg.moe is not None
+        bspec = self.axes.act_btd() if self.batch_sharded else P(None, None, None)
+
+        def layer(x, p):
+            x = self.cs(x, bspec)
+            x = self._attn_block(p, x, positions, causal=True)
+            if enc_out is not None:
+                x = self._attn_block(p, x, positions, kv=enc_out)
+            x, aux, z = self._ffn_block(p, x, use_moe=use_moe)
+            if self.perf.seq_sharded_residual and self.batch_sharded:
+                x = self.cs(x, self.axes.act_btd_sp())
+            return x, (aux, z)
+
+        if "dense0" in params:
+            def layer0(x, p):
+                x = self.cs(x, bspec)
+                x = self._attn_block(p, x, positions, causal=True)
+                x, _, _ = self._ffn_block(p, x, use_moe=False)
+                return x, (0.0, 0.0)
+            x, _ = lax.scan(self._ckpt(layer0), x,
+                            params["dense0"])
+        blocks = params["dec_blocks"] if cfg.family == "audio" else params["blocks"]
+        x, (auxs, zs) = lax.scan(self._ckpt(layer), x, blocks)
+        return x, jnp.sum(jnp.asarray(auxs)), jnp.sum(jnp.asarray(zs))
+
+    def _ssm_stack(self, params, x):
+        def layer(x, p):
+            x = self.cs(x, self.axes.act_btd() if self.batch_sharded else P())
+            h = _norm_apply(self.cfg, p["ln"], x)
+            y, _ = ssm_mod.mamba1_apply(p["mamba"], h, cfg=self.cfg.ssm)
+            return x + y, None
+        x, _ = lax.scan(self._ckpt(layer), x, params["blocks"])
+        return x
+
+    def _hybrid_stack(self, params, x, x0, positions):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def group(x, p):
+            x = self.cs(x, self.axes.act_btd() if self.batch_sharded else P())
+            # shared attention block on concat(x, emb0)
+            xin = jnp.concatenate([x, x0], axis=-1) @ shared["w_in"]
+            xin = self._attn_block(shared, xin, positions, causal=True)
+            xin, _, _ = self._ffn_block(shared, xin, use_moe=False)
+            x = x + xin
+
+            def mlayer(x, pl):
+                h = _norm_apply(cfg, pl["ln"], x)
+                y, _ = ssm_mod.mamba2_apply(pl["mamba"], h, cfg=cfg.ssm)
+                return x + y, None
+            x, _ = lax.scan(self._ckpt(mlayer), x, p)
+            return x, None
+
+        x, _ = lax.scan(group, x, params["blocks"])
+        return x
+
+    def loss(self, params, batch):
+        """batch: tokens (B,S) int32, targets (B,S), mask (B,S) f32,
+        optional frontend (B,F,D) [vlm: prepended; audio: encoder input]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        aux = z = 0.0
+
+        if cfg.family == "vlm":
+            fe = batch["frontend"].astype(self.dtype)
+            Fk = fe.shape[1]
+            x = jnp.concatenate([fe, x], axis=1)
+            positions = jnp.broadcast_to(jnp.arange(Fk + S, dtype=jnp.int32), (B, Fk + S))
+            x, aux, z = self._decoder_stack(params, x, positions)
+            x = x[:, Fk:]
+        elif cfg.family == "audio":
+            enc = batch["frontend"].astype(self.dtype)
+            Se = enc.shape[1]
+            epos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+            def enc_layer(h, p):
+                h = self.cs(h, self.axes.act_btd() if self.batch_sharded else P(None, None, None))
+                h = self._attn_block(p, h, epos, causal=False)
+                h, _, _ = self._ffn_block(p, h, use_moe=False)
+                return h, None
+            enc, _ = lax.scan(self._ckpt(enc_layer), enc, params["enc_blocks"])
+            enc = _norm_apply(cfg, params["enc_norm"], enc)
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            x, aux, z = self._decoder_stack(params, x, positions, enc_out=enc)
+        elif cfg.family == "ssm":
+            x = self._ssm_stack(params, x)
+        elif cfg.family == "hybrid":
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            x = self._hybrid_stack(params, x, x, positions)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            x, aux, z = self._decoder_stack(params, x, positions)
+
+        xent = self._logits_loss(params, x, batch["targets"], batch["mask"])
+        total = xent
+        if cfg.moe is not None:
+            total = total + cfg.moe.aux_coef * aux + cfg.moe.zloss_coef * z
+        return total, {"xent": xent, "aux": aux}
+
+    # =========================================================================
+    # Serving: prefill + decode (KV cache seq-sharded over TP)
+    # =========================================================================
+
+    def _last_logits(self, params, x):
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        h = _norm_apply(self.cfg, params["final_norm"], x[:, -1:])
+        return (h @ w).astype(jnp.float32)
+
+    def _serving_causal(self, q, k, v):
+        if self.perf.exact_causal_prefill:
+            return attn.triangular_causal_attention(
+                q, k, v, q_block=self.q_block,
+                bf16_compute=self.perf.bf16_attention)
+        return attn.blockwise_attention(q, k, v, causal=True, q_block=self.q_block,
+                                        bf16_compute=self.perf.bf16_attention)
+
+    def _cache_layout(self, kv, M: int):
+        """(B, S, Hkv, dh) -> padded cache in the configured layout."""
+        if self.perf.hmajor_cache:
+            kv = kv.transpose(0, 2, 1, 3)          # (B, Hkv, S, dh)
+            pads = [(0, 0)] * 4
+            pads[2] = (0, M - kv.shape[2])
+            return jnp.pad(kv, pads) if pads[2][1] else kv
+        return _pad_seq(kv, M)
+
+    def _attn_prefill(self, p, x, positions, M: int):
+        """Attention sub-block that also emits its padded-to-M KV cache."""
+        cfg = self.cfg
+        h = _norm_apply(cfg, p["ln1"], x)
+        B, S = x.shape[:2]
+        if cfg.mla is not None:
+            ap = p["attn"]
+            ckv, krope = attn.mla_latents(ap, h, mla=cfg.mla, positions=positions,
+                                          rope_theta=cfg.rope_theta)
+            qn, qr = attn.mla_queries(ap, h, n_heads=cfg.n_heads, mla=cfg.mla,
+                                      positions=positions, rope_theta=cfg.rope_theta)
+            k, v = attn.mla_expand_kv(ap, ckv, krope, n_heads=cfg.n_heads, mla=cfg.mla)
+            q = jnp.concatenate([qn, qr], -1)
+            o = self._serving_causal(q, k, v)
+            x = x + o.reshape(B, S, -1) @ ap["wo"]
+            cache = {"ckv": _pad_seq(ckv, M), "krope": _pad_seq(krope[:, :, 0], M)}
+            return x, cache
+        ap = p["attn"]
+        q, k, v = attn.gqa_qkv(ap, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                               head_dim=self.head_dim, positions=positions,
+                               rope_theta=cfg.rope_theta)
+        q = self.cs(q, self.axes.act_heads())
+        o = self._serving_causal(q, k, v)
+        x = x + o.reshape(B, S, -1) @ ap["wo"]
+        return x, {"k": self._cache_layout(k, M), "v": self._cache_layout(v, M)}
+
+    def _attn_decode(self, p, x, cache, cur_len, *, absorbed: bool = True):
+        """One-token attention against a cache; returns (x, new_cache)."""
+        cfg = self.cfg
+        B = x.shape[0]
+        h = _norm_apply(cfg, p["ln1"], x)
+        pos = jnp.broadcast_to(cur_len.astype(jnp.int32), (B, 1))
+        if cfg.mla is not None:
+            ap = p["attn"]
+            ckv_new, krope_new = attn.mla_latents(ap, h, mla=cfg.mla, positions=pos,
+                                                  rope_theta=cfg.rope_theta)
+            ckv = lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, cur_len, axis=1)
+            krope = lax.dynamic_update_slice_in_dim(cache["krope"], krope_new[:, :, 0],
+                                                    cur_len, axis=1)
+            if absorbed:
+                o = attn.mla_decode_absorbed(ap, h, ckv, krope, cur_len + 1,
+                                             n_heads=cfg.n_heads, mla=cfg.mla,
+                                             positions=pos, rope_theta=cfg.rope_theta,
+                                             bf16_compute=self.perf.bf16_attention)
+                return x + o, {"ckv": ckv, "krope": krope}
+            k, v = attn.mla_expand_kv(ap, ckv, krope[:, :, None], n_heads=cfg.n_heads,
+                                      mla=cfg.mla)
+            qn, qr = attn.mla_queries(ap, h, n_heads=cfg.n_heads, mla=cfg.mla,
+                                      positions=pos, rope_theta=cfg.rope_theta)
+            q = jnp.concatenate([qn, qr], -1)
+            o = attn.decode_attention(q, k, v, cur_len + 1,
+                                      bf16_compute=self.perf.bf16_attention)
+            return x + o.reshape(B, 1, -1) @ ap["wo"], {"ckv": ckv, "krope": krope}
+        ap = p["attn"]
+        q, k_new, v_new = attn.gqa_qkv(ap, h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                       head_dim=self.head_dim, positions=pos,
+                                       rope_theta=cfg.rope_theta)
+        if self.perf.hmajor_cache:
+            k = lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.transpose(0, 2, 1, 3), cur_len, axis=2)
+            v = lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.transpose(0, 2, 1, 3), cur_len, axis=2)
+            layout = "bhsd"
+        else:
+            k = lax.dynamic_update_slice_in_dim(cache["k"], k_new, cur_len, axis=1)
+            v = lax.dynamic_update_slice_in_dim(cache["v"], v_new, cur_len, axis=1)
+            layout = "bskd"
+        o = attn.decode_attention(q, k, v, cur_len + 1, layout=layout,
+                                  bf16_compute=self.perf.bf16_attention)
+        return x + o.reshape(B, 1, -1) @ ap["wo"], {"k": k, "v": v}
+
+    def prefill(self, params, batch, *, max_len: int | None = None):
+        """Process a full prompt; returns (cache, last-token fp32 logits).
+
+        batch: tokens (B, S); vlm adds frontend (B,F,D); audio uses frontend
+        as the encoder input.  Cache seq capacity = max_len or S(+F).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = self._embed(params, tokens)
+        cache = {}
+
+        if cfg.family == "vlm":
+            fe = batch["frontend"].astype(self.dtype)
+            Fk = fe.shape[1]
+            x = jnp.concatenate([fe, x], axis=1)
+            S = S + Fk
+        M = max_len or S
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        bspec = self.axes.act_btd() if self.batch_sharded else P(None, None, None)
+
+        if cfg.family == "ssm":
+            def layer(x, p):
+                x = self.cs(x, bspec)
+                h = _norm_apply(cfg, p["ln"], x)
+                y, st = ssm_mod.mamba1_apply(p["mamba"], h, cfg=cfg.ssm)
+                return x + y, st
+            x, states = lax.scan(self._ckpt(layer), x, params["blocks"])
+            cache = states
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, positions, M)
+        elif cfg.family == "audio":
+            enc = batch["frontend"].astype(self.dtype)
+            Se = enc.shape[1]
+            epos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+            def enc_layer(h, p):
+                h = self.cs(h, bspec)
+                h = self._attn_block(p, h, epos, causal=False)
+                h, _, _ = self._ffn_block(p, h, use_moe=False)
+                return h, None
+            enc, _ = lax.scan(self._ckpt(enc_layer), enc, params["enc_blocks"])
+            enc = _norm_apply(cfg, params["enc_norm"], enc)
+
+            def dec_layer(x, p):
+                x = self.cs(x, bspec)
+                x, kv = self._attn_prefill(p, x, positions, M)
+                xh = _norm_apply(cfg, p["ln_x"], x)
+                _, ck, cv = attn.gqa_qkv(p["cross"], enc, n_heads=cfg.n_heads,
+                                         n_kv=cfg.n_kv_heads, head_dim=self.head_dim,
+                                         positions=epos, rope_theta=cfg.rope_theta)
+                ckl = self._cache_layout(ck, ck.shape[1])
+                cvl = self._cache_layout(cv, cv.shape[1])
+                qx, _, _ = attn.gqa_qkv(p["cross"], xh, n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_kv_heads, head_dim=self.head_dim,
+                                        positions=positions, rope_theta=cfg.rope_theta)
+                ox = attn.blockwise_attention(qx, ck, cv, causal=False, q_block=self.q_block)
+                x = x + ox.reshape(B, S, -1) @ p["cross"]["wo"]
+                x, _, _ = self._ffn_block(p, x, use_moe=False)
+                return x, {**kv, "ck": ckl, "cv": cvl}
+            x, cache = lax.scan(self._ckpt(dec_layer), x, params["dec_blocks"])
+        else:
+            use_moe = cfg.moe is not None
+
+            def layer(x, p, moe_here: bool):
+                x = self.cs(x, bspec)
+                x, kv = self._attn_prefill(p, x, positions, M)
+                x, _, _ = self._ffn_block(p, x, use_moe=moe_here)
+                return x, kv
+            if "dense0" in params:
+                x, kv0 = lax.scan(self._ckpt(partial(layer, moe_here=False)),
+                                  x, params["dense0"])
+                cache["dense0"] = kv0
+            x, kv = lax.scan(self._ckpt(partial(layer, moe_here=use_moe)),
+                             x, params["blocks"])
+            cache["blocks"] = kv
+        return cache, self._last_logits(params, x)
+
+    def _hybrid_prefill(self, params, x, positions, M):
+        cfg = self.cfg
+        shared = params["shared"]
+        x0 = x
+        B, S = x.shape[:2]
+
+        def group(x, p):
+            xin = jnp.concatenate([x, x0], axis=-1) @ shared["w_in"]
+            xin, kv = self._attn_prefill(shared, xin, positions, M)
+            xin, _, _ = self._ffn_block(shared, xin, use_moe=False)
+            x = x + xin
+
+            def mlayer(x, pl):
+                h = _norm_apply(cfg, pl["ln"], x)
+                y, st = ssm_mod.mamba2_apply(pl["mamba"], h, cfg=cfg.ssm)
+                return x + y, st
+            x, states = lax.scan(self._ckpt(mlayer), x, p)
+            return x, {**kv, "states": states}
+        x, cache = lax.scan(group, x, params["blocks"])
+        return x, cache
+
+    def decode_step(self, params, cache, token, cur_len):
+        """token: (B,) int32; cur_len: scalar int32 (current cache length).
+        Returns (new_cache, fp32 logits (B, vocab))."""
+        cfg = self.cfg
+        B = token.shape[0]
+        x = self._embed(params, token[:, None])
+        cur_len = jnp.asarray(cur_len, jnp.int32)
+
+        if cfg.family == "ssm":
+            def layer(x, xs):
+                p, st = xs
+                h = _norm_apply(cfg, p["ln"], x)
+                y, st2 = ssm_mod.mamba1_apply(p["mamba"], h, cfg=cfg.ssm, state=st)
+                return x + y, st2
+            x, cache = lax.scan(layer, x, (params["blocks"], cache))
+        elif cfg.family == "hybrid":
+            shared = params["shared"]
+            x0 = x
+
+            def group(x, xs):
+                p, c = xs
+                xin = jnp.concatenate([x, x0], axis=-1) @ shared["w_in"]
+                kvc = {k: c[k] for k in c if k != "states"}
+                xin, kv = self._attn_decode(shared, xin, kvc, cur_len)
+                xin, _, _ = self._ffn_block(shared, xin, use_moe=False, decode=True)
+                x = x + xin
+
+                def mlayer(x, xs2):
+                    pl, st = xs2
+                    h = _norm_apply(cfg, pl["ln"], x)
+                    y, st2 = ssm_mod.mamba2_apply(pl["mamba"], h, cfg=cfg.ssm, state=st)
+                    return x + y, st2
+                x, states = lax.scan(mlayer, x, (p, c["states"]))
+                return x, {**kv, "states": states}
+            x, cache = lax.scan(group, x, (params["blocks"], cache))
+        elif cfg.family == "audio":
+            def dec_layer(x, xs):
+                p, c = xs
+                kvc = {k: c[k] for k in ("k", "v")}
+                x, kv = self._attn_decode(p, x, kvc, cur_len)
+                h = _norm_apply(cfg, p["ln_x"], x)
+                pos = jnp.broadcast_to(cur_len, (B, 1))
+                qx, _, _ = attn.gqa_qkv(p["cross"], h, n_heads=cfg.n_heads,
+                                        n_kv=cfg.n_kv_heads, head_dim=self.head_dim,
+                                        positions=pos, rope_theta=cfg.rope_theta)
+                layout = "bhsd" if self.perf.hmajor_cache else "bskd"
+                clen = c["ck"].shape[2] if self.perf.hmajor_cache else c["ck"].shape[1]
+                ox = attn.decode_attention(qx, c["ck"], c["cv"], clen, layout=layout,
+                                           bf16_compute=self.perf.bf16_attention)
+                x = x + ox.reshape(B, 1, -1) @ p["cross"]["wo"]
+                x, _, _ = self._ffn_block(p, x, use_moe=False, decode=True)
+                return x, {**kv, "ck": c["ck"], "cv": c["cv"]}
+            x, cache = lax.scan(dec_layer, x, (params["dec_blocks"], cache))
+        else:
+            use_moe = cfg.moe is not None
+            new_cache = {}
+
+            def layer(x, xs, moe_here: bool):
+                p, c = xs
+                x, kv = self._attn_decode(p, x, c, cur_len)
+                x, _, _ = self._ffn_block(p, x, use_moe=moe_here, decode=True)
+                return x, kv
+            if "dense0" in params:
+                x, kv0 = lax.scan(partial(layer, moe_here=False),
+                                  x, (params["dense0"], cache["dense0"]))
+                new_cache["dense0"] = kv0
+            x, kv = lax.scan(partial(layer, moe_here=use_moe),
+                             x, (params["blocks"], cache["blocks"]))
+            new_cache["blocks"] = kv
+            cache = new_cache
+        return cache, self._last_logits(params, x)[:, 0]
+
+    # -- cache structure ------------------------------------------------------
+
+    def cache_specs(self, cache_abstract):
+        """PartitionSpec tree for a cache pytree (by leaf name + rank)."""
+        ax = self.axes
+        bspec = ax.dp if self.batch_sharded else None
+
+        def leaf(path, x):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            lead = x.ndim - 4  # stacked layer dims before (B, M, ..., ...)
+            if name in ("k", "v", "ck", "cv"):
+                if self.perf.hmajor_cache:  # (..., B, Hkv, S, dh): shard seq
+                    return P(*(None,) * lead, bspec, None, ax.tp, None)
+                return P(*(None,) * lead, bspec, ax.tp, None, None)
+            if name == "ckv":
+                return P(*(None,) * (x.ndim - 3), bspec, ax.tp, None)
+            if name == "krope":
+                return P(*(None,) * (x.ndim - 3), bspec, ax.tp, None)
+            if name == "ssm":
+                # mamba1: (..., B, Di, N); mamba2: (..., B, H, P, N)
+                if self.cfg.ssm is not None and self.cfg.ssm.kind == "mamba2":
+                    return P(*(None,) * (x.ndim - 4), bspec, ax.tp, None, None)
+                return P(*(None,) * (x.ndim - 3), bspec, ax.tp, None)
+            if name == "conv":
+                return P(*(None,) * (x.ndim - 3), bspec, None, ax.tp)
+            return P(*(None,) * x.ndim)
+
+        return jax.tree_util.tree_map_with_path(leaf, cache_abstract)
+
+
+def _pad_seq(x, M: int):
+    """Pad axis 1 (seq) of (B, S, ...) up to M."""
+    S = x.shape[1]
+    if S == M:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[1] = (0, M - S)
+    return jnp.pad(x, pads)

@@ -1,0 +1,247 @@
+"""Mixture-of-Experts with expert-parallel fused all-to-all dispatch.
+
+The token->expert redistribution is the paper's v->w exchange in disguise:
+each EP rank holds a (experts, capacity, d) send buffer whose leading axis is
+split across the EP group and concatenated back — one fused
+``lax.all_to_all`` each way, no local packing pass beyond the unavoidable
+argsort (DESIGN.md §3).  Two execution paths:
+
+``moe_apply_a2a``   — EP dispatch via two fused all-to-alls (train/prefill;
+                      needs seq divisible by the EP group).
+``moe_apply_local`` — each rank runs its *local* experts on all its tokens,
+                      masked by the router, then psums over the EP axis
+                      (decode path: for one-token steps the a2a round trip
+                      costs more than E_local token-FFNs).
+
+Routing: softmax -> top-k -> renormalize (DeepSeek-V2 style), fp32 router,
+GShard capacity with overflow dropping, load-balance aux loss + router
+z-loss.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, d: int, cfg, mlp_kind: str, dtype=jnp.bfloat16):
+    """cfg: models.config.MoEConfig."""
+    ks = jax.random.split(key, 4)
+    mult = 3 if mlp_kind in ("swiglu", "geglu") else 2
+    ff = cfg.d_ff_expert
+
+    def stack(key, d_in, d_out):
+        keys = jax.random.split(key, cfg.n_experts)
+        return jnp.stack([dense_init(k, d_in, d_out, dtype) for k in keys])
+
+    p = {"router": dense_init(ks[0], d, cfg.n_experts, jnp.float32)}
+    if mult == 3:
+        p["w_gate"] = stack(ks[1], d, ff)
+        p["w_up"] = stack(ks[2], d, ff)
+        p["w_down"] = stack(ks[3], ff, d)
+    else:
+        p["w_up"] = stack(ks[1], d, ff)
+        p["w_down"] = stack(ks[2], ff, d)
+    if cfg.n_shared:
+        p["shared"] = mlp_init(jax.random.fold_in(key, 7), d,
+                               cfg.n_shared * ff, mlp_kind, dtype)
+    return p
+
+
+def _expert_ffn(p, x, kind: str):
+    """x: (E_loc, C, D) through per-expert FFN weights (E_loc, D, F)."""
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", x, p["w_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", x, p["w_up"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", x, p["w_up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, p["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+
+def route(router_w, x, top_k: int):
+    """x: (N, D) -> gates (N, k), expert ids (N, k), aux metrics.
+
+    Softmax over experts, take top-k, renormalize the selected gates.
+    """
+    logits = x.astype(jnp.float32) @ router_w  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # load-balance aux (Switch/GShard): E * sum_e f_e * P_e
+    E = router_w.shape[-1]
+    f = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1)) * top_k
+    pbar = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * pbar)
+    zloss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gates, idx, aux, zloss
+
+
+# ---------------------------------------------------------------------------
+# EP dispatch via fused all-to-all (the paper's exchange)
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_shard(p, x, *, top_k: int, n_experts: int, mlp_kind: str,
+                    ep_axis: str, capacity_factor: float):
+    """Per-shard body (inside shard_map): x (B_loc, S_loc, D)."""
+    B, S, D = x.shape
+    N = B * S
+    ep = lax.axis_size(ep_axis)
+    E, E_loc = n_experts, n_experts // ep
+    xt = x.reshape(N, D)
+
+    gates, idx, aux, zloss = route(p["router"], xt, top_k)
+    cap = int(np.ceil(N * top_k * capacity_factor / E))
+    cap = max(cap, 1)
+
+    flat_e = idx.reshape(-1)                       # (N*k,)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(N), top_k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_t = flat_t[order]
+    sorted_g = flat_g[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos = jnp.arange(N * top_k) - first[sorted_e]
+    keep = pos < cap
+    pos = jnp.where(keep, pos, cap)                # cap -> dropped by mode="drop"
+
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    buf = buf.at[sorted_e, pos].set(xt[sorted_t], mode="drop")
+
+    # ---- the paper's fused exchange: (E, cap, D) -> experts local ---------
+    buf = buf.reshape(ep, E_loc * cap, D)
+    buf = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0, tiled=True)
+    buf = buf.reshape(ep, E_loc, cap, D).transpose(1, 0, 2, 3).reshape(E_loc, ep * cap, D)
+
+    out = _expert_ffn(p, buf, mlp_kind)
+
+    # ---- return trip -------------------------------------------------------
+    out = out.reshape(E_loc, ep, cap, D).transpose(1, 0, 2, 3).reshape(ep, E_loc * cap, D)
+    out = lax.all_to_all(out, ep_axis, split_axis=0, concat_axis=0, tiled=True)
+    out = out.reshape(E, cap, D)
+
+    y_sorted = out[sorted_e, jnp.minimum(pos, cap - 1)] * (keep & (pos < cap))[:, None]
+    y = jnp.zeros((N, D), jnp.float32).at[sorted_t].add(
+        y_sorted.astype(jnp.float32) * sorted_g[:, None])
+    aux = lax.pmean(aux, (ep_axis,))
+    zloss = lax.pmean(zloss, (ep_axis,))
+    return y.astype(x.dtype).reshape(B, S, D), aux, zloss
+
+
+def moe_apply_a2a(p, x, mesh, *, cfg, mlp_kind: str, dp_axes, ep_axis: str,
+                  batch_sharded: bool = True):
+    """x: (B, S, D), S divisible by |ep_axis|.  Returns (y, aux, zloss)."""
+    bspec = dp_axes if batch_sharded else None
+    xspec = P(bspec, ep_axis, None)
+    pspec = jax.tree.map(lambda _: P(), p)
+    pspec = dict(pspec)
+    for k in ("w_gate", "w_up", "w_down"):
+        if k in pspec and k != "shared":
+            pspec[k] = P(ep_axis, None, None)
+    if "shared" in p:
+        pspec["shared"] = jax.tree.map(lambda _: P(), p["shared"])
+
+    fn = jax.shard_map(
+        partial(_dispatch_shard, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                mlp_kind=mlp_kind, ep_axis=ep_axis,
+                capacity_factor=cfg.capacity_factor),
+        mesh=mesh,
+        in_specs=(pspec, xspec),
+        out_specs=(xspec, P(), P()),
+        check_vma=False,
+    )
+    y, aux, zloss = fn(p, x)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, mlp_kind)
+    return y, aux, zloss
+
+
+# ---------------------------------------------------------------------------
+# Local-experts path (decode) — no all-to-all, psum combine
+# ---------------------------------------------------------------------------
+
+
+def _local_shard(p, x, *, top_k: int, n_experts: int, mlp_kind: str, ep_axis: str):
+    B, S, D = x.shape
+    N = B * S
+    ep = lax.axis_size(ep_axis)
+    E_loc = n_experts // ep
+    r = lax.axis_index(ep_axis)
+    xt = x.reshape(N, D)
+    gates, idx, aux, zloss = route(p["router"], xt, top_k)
+    # dense gate matrix restricted to local experts
+    e0 = r * E_loc
+    g_full = jnp.zeros((N, n_experts), jnp.float32)
+    g_full = g_full.at[jnp.arange(N)[:, None], idx].set(gates)
+    g_loc = lax.dynamic_slice_in_dim(g_full, e0, E_loc, axis=1)  # (N, E_loc)
+    xin = jnp.broadcast_to(xt[None], (E_loc, N, D))
+    yout = _expert_ffn(p, xin, mlp_kind)            # (E_loc, N, D)
+    y = jnp.einsum("ne,end->nd", g_loc, yout.astype(jnp.float32))
+    y = lax.psum(y, ep_axis)
+    return y.astype(x.dtype).reshape(B, S, D), lax.pmean(aux, ep_axis), lax.pmean(zloss, ep_axis)
+
+
+def moe_apply_local(p, x, mesh, *, cfg, mlp_kind: str, dp_axes, ep_axis: str,
+                    batch_sharded: bool = True):
+    """Decode path: x (B, S, D) with S tiny; experts local, psum combine."""
+    bspec = dp_axes if batch_sharded else None
+    xspec = P(bspec, None, None)
+    pspec = dict(jax.tree.map(lambda _: P(), p))
+    for k in ("w_gate", "w_up", "w_down"):
+        if k in pspec:
+            pspec[k] = P(ep_axis, None, None)
+    if "shared" in p:
+        pspec["shared"] = jax.tree.map(lambda _: P(), p["shared"])
+    fn = jax.shard_map(
+        partial(_local_shard, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                mlp_kind=mlp_kind, ep_axis=ep_axis),
+        mesh=mesh, in_specs=(pspec, xspec), out_specs=(xspec, P(), P()),
+        check_vma=False,
+    )
+    y, aux, zloss = fn(p, x)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, mlp_kind)
+    return y, aux, zloss
+
+
+# ---------------------------------------------------------------------------
+# Meshless dense path (explicit-DP / local_mode: all experts resident)
+# ---------------------------------------------------------------------------
+
+
+def moe_apply_dense(p, x, *, cfg, mlp_kind: str):
+    """Every token through every expert, gate-masked — O(E/k) extra compute,
+    used only in local_mode (explicit-DP training, smoke tests)."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    gates, idx, aux, zloss = route(p["router"], xt, cfg.top_k)
+    g_full = jnp.zeros((B * S, cfg.n_experts), jnp.float32)
+    g_full = g_full.at[jnp.arange(B * S)[:, None], idx].set(gates)
+    xin = jnp.broadcast_to(xt[None], (cfg.n_experts, B * S, D))
+    yout = _expert_ffn(p, xin, mlp_kind)
+    y = jnp.einsum("ne,end->nd", g_full, yout.astype(jnp.float32))
+    y = y.astype(x.dtype).reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, mlp_kind)
+    return y, aux, zloss

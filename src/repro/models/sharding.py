@@ -1,0 +1,66 @@
+"""Sharding rules: map every param / activation / cache leaf to a PartitionSpec.
+
+Mesh axes (launch/mesh.py):
+  single-pod  (data=16, model=16)
+  multi-pod   (pod=2, data=16, model=16)
+
+Conventions (MaxText-style 2-D "FSDP x TP"):
+  DP axis   = ("pod", "data") when the mesh has a pod axis, else ("data",).
+  FSDP axis = "data"  — parameters/optimizer state sharded along a non-TP dim.
+  TP axis   = "model" — Megatron column->row within each block; vocab for
+              embeddings/logits; experts for MoE; heads for attention.
+
+KV-head subtlety: several assigned archs have n_kv_heads < |model| (e.g.
+glm4 kv=2 on TP16).  We deliberately leave KV projections *unconstrained* on
+the head dim (GSPMD replicates/pads as needed) — the same choice Megatron
+and vLLM make (KV replication when kv < tp).  Q heads are sharded; GSPMD
+handles the 56-head (llava) case by internal padding.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+
+class Axes:
+    """Resolved mesh-axis names for one mesh flavour."""
+
+    def __init__(self, *, multi_pod: bool):
+        self.dp = ("pod", "data") if multi_pod else ("data",)
+        self.fsdp = "data"
+        self.tp = "model"
+
+    # -- activations ---------------------------------------------------------
+    def act_btd(self) -> P:
+        """(batch, seq, d_model) activations."""
+        return P(self.dp, None, None)
+
+    def act_btd_sp(self) -> P:
+        """Sequence-parallel activations (batch, seq/model, d_model)."""
+        return P(self.dp, self.tp, None)
+
+    def act_heads(self) -> P:
+        """(batch, seq, heads, head_dim) — heads are TP-sharded."""
+        return P(self.dp, None, self.tp, None)
+
+    def logits(self) -> P:
+        """(batch, seq, vocab) — vocab TP-sharded."""
+        return P(self.dp, None, self.tp)
+
+    def tokens(self) -> P:
+        return P(self.dp, None)
+
+    # -- cache ----------------------------------------------------------------
+    def kv_cache(self) -> P:
+        """(layers, batch, seq, kv_heads, head_dim): seq TP-sharded
+        (flash-decoding / sequence-sharded cache; see models/attention.py)."""
+        return P(None, self.dp, self.tp, None, None)
+
+    def ssm_cache(self) -> P:
+        """(layers, batch, d_inner, d_state): d_inner TP-sharded."""
+        return P(None, self.dp, self.tp, None)
+
+
+def batch_spec(axes: Axes, global_batch: int, dp_size: int) -> P:
+    """Batch dim spec — replicate when batch doesn't divide DP (long_500k B=1)."""
+    return axes.dp if global_batch % dp_size == 0 and global_batch >= dp_size else None

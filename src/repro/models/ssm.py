@@ -1,0 +1,282 @@
+"""State-space layers: Mamba1 (selective scan) and Mamba2 (SSD).
+
+Both are written **chunked**: a sequential ``lax.scan`` over sequence chunks
+carrying the SSM state, with the within-chunk work either an associative
+scan (Mamba1) or decay-masked matmuls (Mamba2/SSD — MXU-native, the same
+"express the recurrence as dense contractions" doctrine the four-step DFT
+kernel uses).  Chunk bodies are ``jax.checkpoint``-ed so the backward pass
+stores only the per-chunk carried state, never (B, T, d_inner, d_state).
+
+Decode is O(1) in sequence length: conv ring state + SSM state per layer —
+this is what makes ``long_500k`` runnable for the ssm/hybrid archs.
+
+TP: d_inner (and Mamba2 heads) shard over the model axis; states inherit it.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (shared by both variants)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, T, C); w: (K, C) depthwise taps; left-padded causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):  # K is 4 — unrolled taps beat a conv HLO here
+        # xp[:, t+k] is x[t - (K-1-k)]: the newest input meets the LAST tap
+        out = out + xp[:, k : k + x.shape[1]].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_tail(x: jax.Array, K: int) -> jax.Array:
+    """Last K-1 raw inputs of (B, T, C) — the decode conv ring state."""
+    B, T, C = x.shape
+    if T >= K - 1:
+        return x[:, T - (K - 1):]
+    return jnp.pad(x, ((0, 0), (K - 1 - T, 0), (0, 0)))
+
+
+def causal_conv_step(state: jax.Array, x_t: jax.Array, w: jax.Array, b: jax.Array):
+    """Decode: state (B, K-1, C) holds the last K-1 inputs; x_t (B, C)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_t.dtype)
+    return window[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_init(key, d: int, cfg, dtype=jnp.bfloat16):
+    di = cfg.expand * d
+    dtr = cfg.dt_rank or -(-d // 16)
+    N = cfg.d_state
+    ks = jax.random.split(key, 6)
+    # S4D-real init for A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (di, 1))
+    dt = jnp.exp(jax.random.uniform(ks[4], (di,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) / math.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * N, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype, scale=dtr**-0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _ssm_combine(l, r):
+    """Associative combine for h_t = a_t h_{t-1} + b_t (l earlier than r)."""
+    a_l, b_l = l
+    a_r, b_r = r
+    return a_l * a_r, a_r * b_l + b_r
+
+
+def selective_scan(x, dt, A, Bm, Cm, *, chunk: int, h0=None):
+    """Diagonal selective scan, chunked.
+
+    x, dt: (B, T, Di); A: (Di, N); Bm, Cm: (B, T, N).
+    Returns y (B, T, Di) fp32 and final state (B, Di, N) fp32.
+    """
+    B, T, Di = x.shape
+    N = A.shape[-1]
+    Lc = min(chunk, T)
+    pad = -T % Lc
+    if pad:
+        x, dt, Bm, Cm = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                         for a in (x, dt, Bm, Cm))
+    nch = (T + pad) // Lc
+    xs = tuple(a.reshape(B, nch, Lc, -1).swapaxes(0, 1) for a in (x, dt, Bm, Cm))
+    h = jnp.zeros((B, Di, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(h, xs_c):
+        x_c, dt_c, B_c, C_c = xs_c
+        dt_f = dt_c.astype(jnp.float32)
+        dA = jnp.exp(dt_f[..., None] * A)                         # (B, Lc, Di, N)
+        dBx = dt_f[..., None] * B_c.astype(jnp.float32)[:, :, None, :] \
+            * x_c.astype(jnp.float32)[..., None]
+        a_sc, b_sc = lax.associative_scan(_ssm_combine, (dA, dBx), axis=1)
+        hs = b_sc + a_sc * h[:, None]                             # (B, Lc, Di, N)
+        y_c = jnp.einsum("blin,bln->bli", hs, C_c.astype(jnp.float32))
+        return hs[:, -1], y_c
+
+    h, ys = lax.scan(body, h, xs)
+    y = ys.swapaxes(0, 1).reshape(B, T + pad, Di)[:, :T]
+    return y, h
+
+
+def mamba1_apply(p, u, *, cfg, state=None):
+    """u: (B, T, D).  state=None for train/prefill; returns (y, new_state).
+
+    ``state`` is {"conv": (B, K-1, Di), "ssm": (B, Di, N)} for decode.
+    """
+    di = p["D"].shape[0]
+    N = cfg.d_state
+    dtr = p["dt_proj"].shape[0]
+    xz = u @ p["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        conv_state = conv_tail(x, cfg.d_conv)
+        x = causal_conv(x, p["conv_w"], p["conv_b"])
+    else:
+        conv_state, x1 = causal_conv_step(state["conv"], x[:, 0], p["conv_w"], p["conv_b"])
+        x = x1[:, None]
+    x = jax.nn.silu(x)
+
+    proj = x @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus((dt @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if state is None:
+        y, h = selective_scan(x, dt, A, Bm, Cm, chunk=cfg.chunk)
+        new_state = {"ssm": h, "conv": conv_state}
+    else:
+        dA = jnp.exp(dt[:, 0, :, None] * A)
+        dBx = dt[:, 0, :, None] * Bm.astype(jnp.float32)[:, 0, None, :] \
+            * x.astype(jnp.float32)[:, 0, :, None]
+        h = dA * state["ssm"] + dBx
+        y = jnp.einsum("bin,bn->bi", h, Cm.astype(jnp.float32)[:, 0])[:, None]
+        new_state = {"ssm": h, "conv": conv_state}
+
+    y = y + p["D"] * x.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ p["out_proj"], new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, d: int, cfg, dtype=jnp.bfloat16):
+    di = cfg.expand * d
+    nh = di // cfg.headdim
+    N = cfg.d_state
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * N
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * N + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_dim)) / math.sqrt(cfg.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def ssd_scan(xh, dt, a_log, Bm, Cm, *, chunk: int, s0=None):
+    """SSD chunked recurrence (Mamba2).
+
+    xh: (B, T, H, P) inputs per head; dt: (B, T, H) (post-softplus);
+    a_log = -exp(A_log) per head; Bm, Cm: (B, T, N) (single group).
+    h_t = a_t h_{t-1} + dt_t * B_t (x_t dt already applied? no: b_t = dt_t x_t B_t).
+    Returns y (B, T, H, P) fp32 and final state (B, H, P, N) fp32.
+    """
+    B, T, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Lc = min(chunk, T)
+    pad = -T % Lc
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nch = (T + pad) // Lc
+    xs = (xh.reshape(B, nch, Lc, H, Pd).swapaxes(0, 1),
+          dt.reshape(B, nch, Lc, H).swapaxes(0, 1),
+          Bm.reshape(B, nch, Lc, N).swapaxes(0, 1),
+          Cm.reshape(B, nch, Lc, N).swapaxes(0, 1))
+    s = jnp.zeros((B, H, Pd, N), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(s, xs_c):
+        x_c, dt_c, B_c, C_c = (a.astype(jnp.float32) for a in xs_c)
+        la = dt_c * a_log                                   # (B, Lc, H) log decay
+        cum = jnp.cumsum(la, axis=1)                        # s_i
+        xb = x_c * dt_c[..., None]                          # dt-weighted input
+        # intra-chunk: att[i,j] = (C_i . B_j) exp(s_i - s_j) for j <= i
+        att = jnp.einsum("bin,bjn->bij", C_c, B_c)[:, None] \
+            * jnp.exp(cum.transpose(0, 2, 1)[..., :, None] - cum.transpose(0, 2, 1)[..., None, :])
+        tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+        att = jnp.where(tri[None, None], att, 0.0)          # (B, H, Lc, Lc)
+        y = jnp.einsum("bhij,bjhp->bihp", att, xb)
+        # inter-chunk: y_i += C_i . (exp(s_i) s_prev)
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", C_c, s, jnp.exp(cum))
+        # state update: s' = exp(s_last) s + sum_j exp(s_last - s_j) B_j (x)_j
+        w = jnp.exp(cum[:, -1:, :] - cum)                    # (B, Lc, H)
+        s_new = s * jnp.exp(cum[:, -1])[:, :, None, None] \
+            + jnp.einsum("bjn,bjhp,bjh->bhpn", B_c, xb, w)
+        return s_new, y
+
+    s, ys = lax.scan(body, s, xs)
+    y = ys.swapaxes(0, 1).reshape(B, T + pad, H, Pd)[:, :T]
+    return y, s
+
+
+def mamba2_apply(p, u, *, cfg, state=None):
+    """u: (B, T, D); Mamba2 block.  state for decode: conv + ssm (B,H,P,N)."""
+    di = p["norm_w"].shape[0]
+    N = cfg.d_state
+    H = di // cfg.headdim
+    Pd = cfg.headdim
+    B, T, _ = u.shape
+    proj = u @ p["in_proj"]
+    z, x, Bm, Cm, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    if state is None:
+        conv_state = conv_tail(xbc, cfg.d_conv)
+        xbc = causal_conv(xbc, p["conv_w"], p["conv_b"])
+    else:
+        conv_state, xbc1 = causal_conv_step(state["conv"], xbc[:, 0], p["conv_w"], p["conv_b"])
+        xbc = xbc1[:, None]
+    xbc = jax.nn.silu(xbc)
+    x, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    a_log = -jnp.exp(p["A_log"])                                 # (H,)
+    xh = x.reshape(B, T, H, Pd)
+
+    if state is None:
+        y, s = ssd_scan(xh, dt, a_log, Bm, Cm, chunk=cfg.chunk)
+        new_state = {"ssm": s, "conv": conv_state}
+    else:
+        a = jnp.exp(dt[:, 0] * a_log)                            # (B, H)
+        xb = xh.astype(jnp.float32)[:, 0] * dt[:, 0, :, None]
+        s = state["ssm"] * a[..., None, None] \
+            + jnp.einsum("bn,bhp->bhpn", Bm.astype(jnp.float32)[:, 0], xb)
+        y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32)[:, 0], s)[:, None]
+        new_state = {"ssm": s, "conv": conv_state}
+
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, T, di)
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype), p["norm_w"], 1e-5)
+    return y @ p["out_proj"], new_state

@@ -1,0 +1,86 @@
+"""AdamW with cosine schedule and global-norm clipping.
+
+Optimizer state is a pytree congruent with params, so it inherits the
+params' NamedShardings (FSDP: optimizer state is sharded exactly like the
+weights — the ZeRO-3 layout).  Moments are fp32 regardless of param dtype;
+``update`` is pure and jit-friendly.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array     # int32 scalar
+    mu: Any             # first moment  (fp32, like params)
+    nu: Any             # second moment (fp32)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Any                      # float or callable(step)->lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(zeros, params),
+                        nu=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu2 = b1 * mu + (1 - b1) * g
+            nu2 = b2 * nu + (1 - b2) * jnp.square(g)
+            mhat = mu2 / c1
+            nhat = nu2 / c2
+            delta = mhat / (jnp.sqrt(nhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (standard practice)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu2, nu2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state.mu)
+        flat_nu = tdef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        new_nu = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step, new_mu, new_nu), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainConfig
+
+__all__ = ["Trainer", "TrainConfig"]

@@ -1,0 +1,139 @@
+"""Blockwise/decode attention vs a naive dense-softmax oracle."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import blockwise_attention, decode_attention
+
+
+def naive_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(np.float32).reshape(B, Sq, Hkv, G, dh)
+    s = np.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(np.float32)) / math.sqrt(dh)
+    kv_pos = np.arange(k.shape[1])
+    mask = np.ones((Sq, k.shape[1]), bool)
+    if causal:
+        q_pos = q_offset + np.arange(Sq)
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if kv_len is not None:
+        mask &= kv_pos[None, :] < kv_len
+    s = np.where(mask[None, None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bhgqk,bkhd->bqhgd", p, v.astype(np.float32))
+    return o.reshape(B, Sq, Hq, -1)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("Sq,Skv,qb", [(16, 16, 4), (32, 32, 32), (24, 24, 7),
+                                       (8, 24, 4)])
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2)])
+def test_blockwise_matches_naive(causal, Sq, Skv, qb, Hq, Hkv):
+    rng = np.random.default_rng(0)
+    B, dh = 2, 16
+    q = rng.standard_normal((B, Sq, Hq, dh)).astype(np.float32)
+    k = rng.standard_normal((B, Skv, Hkv, dh)).astype(np.float32)
+    v = rng.standard_normal((B, Skv, Hkv, dh)).astype(np.float32)
+    off = Skv - Sq if causal else 0
+    got = blockwise_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=causal, q_block=qb, q_offset=off)
+    want = naive_attention(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_kv_len_masking():
+    rng = np.random.default_rng(1)
+    B, S, H, dh = 1, 16, 2, 8
+    q = rng.standard_normal((B, S, H, dh)).astype(np.float32)
+    k = rng.standard_normal((B, S, H, dh)).astype(np.float32)
+    v = rng.standard_normal((B, S, H, dh)).astype(np.float32)
+    got = blockwise_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                              causal=False, q_block=4, kv_len=jnp.int32(10))
+    want = naive_attention(q, k[:, :10], v[:, :10], causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_naive():
+    rng = np.random.default_rng(2)
+    B, M, Hq, Hkv, dh = 3, 32, 8, 2, 16
+    q = rng.standard_normal((B, 1, Hq, dh)).astype(np.float32)
+    k = rng.standard_normal((B, M, Hkv, dh)).astype(np.float32)
+    v = rng.standard_normal((B, M, Hkv, dh)).astype(np.float32)
+    cur = 20
+    got = decode_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           jnp.int32(cur))
+    want = naive_attention(q, k[:, :cur], v[:, :cur], causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_gradients_finite():
+    rng = np.random.default_rng(3)
+    B, S, H, dh = 2, 16, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32)
+
+    def f(q):
+        return jnp.sum(blockwise_attention(q, q, q, causal=True, q_block=4) ** 2)
+
+    g = jax.grad(f)(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_ulysses_matches_blockwise(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core.meshutil import make_mesh
+from repro.models.attention import blockwise_attention, ulysses_attention
+mesh = make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+B, S, H, dh = 2, 32, 8, 16
+q, k, v = (jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32) for _ in range(3))
+with jax.set_mesh(mesh):
+    want = blockwise_attention(q, k, v, causal=True, q_block=8)
+    got = jax.jit(lambda q, k, v: ulysses_attention(
+        q, k, v, mesh, tp_axis="model", causal=True, q_block=8))(q, k, v)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+# GQA: kv heads fewer than tp -> replicated path
+k2, v2 = k[:, :, :2], v[:, :, :2]
+with jax.set_mesh(mesh):
+    want = blockwise_attention(q, k2, v2, causal=True, q_block=8)
+    got = jax.jit(lambda q, k, v: ulysses_attention(
+        q, k, v, mesh, tp_axis="model", causal=True, q_block=8))(q, k2, v2)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+print("ULYSSES OK")
+""", ndev=8)
+
+
+def test_triangular_matches_blockwise():
+    from repro.models.attention import triangular_causal_attention
+    rng = np.random.default_rng(7)
+    for (S, qb, Hq, Hkv) in [(32, 8, 4, 2), (24, 7, 4, 4), (16, 16, 2, 1)]:
+        q = jnp.asarray(rng.standard_normal((2, S, Hq, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, S, Hkv, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, S, Hkv, 16)), jnp.float32)
+        want = blockwise_attention(q, k, v, causal=True, q_block=qb)
+        got = triangular_causal_attention(q, k, v, q_block=qb, bf16_compute=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_bf16_compute_close_to_fp32():
+    rng = np.random.default_rng(8)
+    B, S, H, dh = 2, 32, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.bfloat16)
+    base = blockwise_attention(q, k, v, causal=True, q_block=8)
+    opt = blockwise_attention(q, k, v, causal=True, q_block=8, bf16_compute=True)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(opt, np.float32), rtol=0.1, atol=0.05)
+    d = decode_attention(q[:, :1], k, v, jnp.int32(S), bf16_compute=True)
+    d0 = decode_attention(q[:, :1], k, v, jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(d, np.float32),
+                               np.asarray(d0, np.float32), rtol=0.1, atol=0.05)

@@ -1,0 +1,92 @@
+"""Exactness of the 10 assigned architecture configs (deliverable f)."""
+
+import pytest
+
+from repro import configs
+
+
+def C(name):
+    return configs.get(name)
+
+
+def test_glm4_9b():
+    c = C("glm4_9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (40, 4096, 32, 2)
+    assert (c.d_ff, c.vocab) == (13696, 151552)
+    assert c.family == "dense"
+
+
+def test_stablelm_12b():
+    c = C("stablelm_12b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (40, 5120, 32, 8)
+    assert (c.d_ff, c.vocab) == (13824, 100352)
+
+
+def test_nemotron_4_15b():
+    c = C("nemotron_4_15b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (32, 6144, 48, 8)
+    assert (c.d_ff, c.vocab) == (24576, 256000)
+    assert c.mlp == "relu2"                      # squared-ReLU per assignment
+
+
+def test_qwen2_72b():
+    c = C("qwen2_72b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (80, 8192, 64, 8)
+    assert (c.d_ff, c.vocab) == (29568, 152064)
+    assert c.qkv_bias                            # QKV bias per assignment
+
+
+def test_deepseek_v2_lite():
+    c = C("deepseek_v2_lite_16b")
+    assert (c.n_layers, c.d_model, c.n_heads) == (27, 2048, 16)
+    assert c.vocab == 102400
+    assert c.mla.kv_lora_rank == 512             # MLA kv_lora=512
+    assert (c.moe.n_experts, c.moe.top_k, c.moe.n_shared) == (64, 6, 2)
+    assert c.moe.d_ff_expert == 1408
+
+
+def test_phi35_moe():
+    c = C("phi35_moe_42b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (32, 4096, 32, 8)
+    assert (c.moe.n_experts, c.moe.top_k) == (16, 2)
+    assert (c.d_ff, c.vocab) == (6400, 32064)
+
+
+def test_seamless_m4t_medium():
+    c = C("seamless_m4t_medium")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (12, 1024, 16, 16)
+    assert (c.d_ff, c.vocab) == (4096, 256206)
+    assert c.encdec and c.frontend == "audio"    # enc-dec, stub frontend
+
+
+def test_llava_next_34b():
+    c = C("llava_next_34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (60, 7168, 56, 8)
+    assert (c.d_ff, c.vocab) == (20480, 64000)
+    assert c.frontend == "vision" and c.n_frontend_tokens > 0
+
+
+def test_zamba2():
+    c = C("zamba2_2p7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (54, 2560, 32, 32)
+    assert (c.d_ff, c.vocab) == (10240, 32000)
+    assert c.ssm.kind == "mamba2" and c.ssm.d_state == 64
+    assert c.subquadratic                        # long_500k runs
+
+
+def test_falcon_mamba():
+    c = C("falcon_mamba_7b")
+    assert (c.n_layers, c.d_model) == (64, 4096)
+    assert c.vocab == 65024 and c.d_ff == 0       # attention-free
+    assert c.ssm.kind == "mamba1" and c.ssm.d_state == 16
+    assert c.subquadratic
+
+
+def test_smoke_reduction_preserves_family():
+    for name in configs.ARCH_NAMES:
+        full, small = configs.get(name), configs.smoke(name)
+        assert small.family == full.family
+        assert (small.moe is None) == (full.moe is None)
+        assert (small.mla is None) == (full.mla is None)
+        assert (small.ssm is None) == (full.ssm is None)
+        assert small.d_model < full.d_model

@@ -1,0 +1,38 @@
+"""Data pipeline: determinism, shard partition, learnable structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import SyntheticLMData
+
+
+def test_batch_determinism():
+    d = SyntheticLMData(vocab=128, seq_len=16, global_batch=4, seed=3)
+    b1, b2 = d.batch(7), d.batch(7)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    b3 = d.batch(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+@given(pc=st.sampled_from([1, 2, 4]), step=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_host_shards_partition_batch(pc, step):
+    d = SyntheticLMData(vocab=64, seq_len=8, global_batch=8, seed=0)
+    full = d.batch(step)
+    parts = [d.host_local_batch(step, process_index=i, process_count=pc)
+             for i in range(pc)]
+    got = np.concatenate([np.asarray(p["tokens"]) for p in parts], axis=0)
+    np.testing.assert_array_equal(got, np.asarray(full["tokens"]))
+
+
+def test_targets_are_next_token_predictable():
+    """The bigram structure makes targets a function of (input, base):
+    check targets stay in range and inputs are the shifted targets."""
+    d = SyntheticLMData(vocab=97, seq_len=32, global_batch=2, seed=1)
+    b = d.batch(0)
+    toks, tgt = np.asarray(b["tokens"]), np.asarray(b["targets"])
+    assert toks.min() >= 0 and toks.max() < 97
+    np.testing.assert_array_equal(toks[:, 1:], tgt[:, :-1])

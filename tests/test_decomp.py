@@ -1,0 +1,54 @@
+"""Property tests for the paper's Alg. 1 (balanced block decomposition)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decomp import (AxisDecomp, decompose, local_lengths,
+                               pad_to_multiple, start_indices)
+
+
+@given(N=st.integers(0, 10_000), M=st.integers(1, 257))
+@settings(max_examples=300, deadline=None)
+def test_decompose_partition(N, M):
+    ns = local_lengths(N, M)
+    ss = start_indices(N, M)
+    assert sum(ns) == N                       # covers exactly
+    assert max(ns) - min(ns) <= 1             # balanced
+    assert ss[0] == 0
+    for p in range(1, M):
+        assert ss[p] == ss[p - 1] + ns[p - 1]  # contiguous, ordered
+    # paper Listing 1 formulas
+    q, r = divmod(N, M)
+    for p in range(M):
+        assert ns[p] == q + (1 if r > p else 0)
+        assert ss[p] == q * p + min(r, p)
+
+
+@given(N=st.integers(0, 100_000), M=st.integers(1, 512))
+@settings(max_examples=200, deadline=None)
+def test_pad_to_multiple(N, M):
+    P = pad_to_multiple(N, M)
+    assert P % M == 0 and P >= N and P - N < M
+
+
+@given(N=st.integers(1, 5_000), M=st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_axis_decomp_slices(N, M):
+    ad = AxisDecomp(N, M)
+    assert ad.shard * M == ad.padded
+    phys = ad.owner_slices()
+    assert phys[0].start == 0 and phys[-1].stop == ad.padded
+    bal = ad.balanced_slices()
+    covered = [i for s in bal for i in range(s.start, s.stop)]
+    assert covered == list(range(N))
+
+
+def test_decompose_validation():
+    with pytest.raises(ValueError):
+        decompose(-1, 4, 0)
+    with pytest.raises(ValueError):
+        decompose(10, 0, 0)
+    with pytest.raises(ValueError):
+        decompose(10, 4, 4)

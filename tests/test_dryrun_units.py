@@ -1,0 +1,78 @@
+"""Unit tests for dry-run plumbing that don't need 512 devices."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def _collective_bytes(text):
+    from repro.launch.dryrun_lib import collective_bytes
+    return collective_bytes(text)
+
+
+HLO = """
+  %all-reduce.1 = f32[16,256]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[64,128]{1,0} all-gather(%y), channel_id=2, replica_groups=[32,8]<=[256], dimensions={0}
+  %rs = f32[8,16]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[64,4]<=[256], to_apply=%add
+  %a2a = c64[32,32]{1,0} all-to-all(%w), channel_id=4, replica_groups=[16,16]<=[256]
+  %cp = f32[10]{0} collective-permute(%v), channel_id=5
+  %tuple_ar = (f32[4]{0}, f32[2]{0}) all-reduce(%a, %b), channel_id=6, replica_groups=[16,16]<=[256], to_apply=%add
+  %fusion.1 = f32[16,256]{1,0} fusion(%all-reduce.1), kind=kLoop
+"""
+
+
+def test_collective_bytes_parser():
+    out = _collective_bytes(HLO)
+    assert out["all-reduce"] == 16 * 256 * 4 + (4 + 2) * 4
+    assert out["all-gather"] == 64 * 128 * 2 // 8       # result / group
+    assert out["reduce-scatter"] == 8 * 16 * 4 * 4      # result * group
+    assert out["all-to-all"] == 32 * 32 * 8
+    assert out["collective-permute"] == 10 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_async_pairs_not_double_counted():
+    txt = """
+  %s = f32[8]{0} all-reduce-start(%x), channel_id=1, replica_groups=[2,2]<=[4], to_apply=%add
+  %d = f32[8]{0} all-reduce-done(%s)
+"""
+    out = _collective_bytes(txt)
+    assert out["all-reduce"] == 8 * 4
+
+
+def test_input_specs_shapes():
+    from repro import configs
+    from repro.launch.dryrun_lib import input_specs
+    cfg = configs.get("llava_next_34b")
+    batch, (B, S, kind) = input_specs(cfg, "train_4k")
+    assert batch["tokens"].shape == (256, 4096)
+    assert batch["frontend"].shape == (256, 2048, 7168)
+    cfgA = configs.get("seamless_m4t_medium")
+    batch, _ = input_specs(cfgA, "prefill_32k")
+    assert set(batch) == {"tokens", "frontend"}
+    assert batch["frontend"].shape == (32, 32768, 1024)
+
+
+def test_all_cells_table():
+    from repro import configs
+    cells = configs.all_cells()
+    assert len(cells) == 10 * 3 + 2  # 3 shapes everywhere + long_500k on 2 ssm archs
+    assert ("falcon_mamba_7b", "long_500k") in cells
+    assert ("qwen2_72b", "long_500k") not in cells
+
+
+def test_model_flops_accounting():
+    from repro import configs
+    from repro.models.config import active_param_count, param_count
+    ds = configs.get("deepseek_v2_lite_16b")
+    n, na = param_count(ds), active_param_count(ds)
+    assert 14e9 < n < 18e9, n            # ~15.7B published
+    assert 2e9 < na < 4e9, na            # ~2.4B active published
+    q = configs.get("qwen2_72b")
+    assert 70e9 < param_count(q) < 75e9
+    g = configs.get("glm4_9b")
+    assert 8e9 < param_count(g) < 11e9
+    z = configs.get("zamba2_2p7b")
+    assert 2e9 < param_count(z) < 3.5e9
+    f = configs.get("falcon_mamba_7b")
+    assert 6e9 < param_count(f) < 8.5e9

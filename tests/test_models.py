@@ -1,0 +1,151 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family config, one
+forward/train step on CPU, shape + finiteness asserts; plus decode==forward
+logit-consistency for representative families."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.meshutil import make_mesh
+from repro.models.config import param_count
+from repro.models.lm import LM
+from repro.models.sharding import Axes
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+AXES = Axes(multi_pod=False)
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "targets": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["frontend"] = jax.random.normal(key, (B, cfg.n_frontend_tokens, cfg.d_model),
+                                              jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frontend"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_arch_smoke_train_step(name, mesh):
+    cfg = configs.smoke(name)
+    lm = LM(cfg, mesh, AXES, q_block=8, xent_chunks=2)
+    key = jax.random.PRNGKey(0)
+    with jax.set_mesh(mesh):
+        params = lm.init_params(key)
+        batch = _batch(cfg, key)
+        (loss, metrics), grads = jax.jit(jax.value_and_grad(lm.loss, has_aux=True))(
+            params, batch)
+        assert np.isfinite(float(loss))
+        assert np.isfinite(float(metrics["xent"]))
+        for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+            assert bool(jnp.all(jnp.isfinite(g))), (name, path)
+        # output-shape asserts: logits path via prefill
+        cur = 16 + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+        cache, logits = jax.jit(lambda p, b: lm.prefill(p, b, max_len=cur + 2))(
+            params, batch)
+        assert logits.shape == (2, 1, lm.vocab_padded)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_arch_full_config_registry(name):
+    """The exact published config: field values as assigned."""
+    cfg = configs.get(name)
+    n = param_count(cfg)
+    assert n > 1e8  # all assigned archs are >= 1B-ish; smoke guard on formula
+    assert cfg.vocab > 0 and cfg.n_layers > 0
+    cells = configs.cells(name)
+    assert "train_4k" in cells
+    assert ("long_500k" in cells) == cfg.subquadratic
+
+
+@pytest.mark.parametrize("name", ["glm4_9b", "deepseek_v2_lite_16b",
+                                  "falcon_mamba_7b", "zamba2_2p7b",
+                                  "seamless_m4t_medium"])
+def test_prefill_decode_matches_forward(name, mesh):
+    """Teacher-forced decode must reproduce the full-sequence logits."""
+    cfg = configs.smoke(name)
+    lm = LM(cfg, mesh, AXES, q_block=4, xent_chunks=1)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 8
+    with jax.set_mesh(mesh):
+        params = lm.init_params(key)
+        toks = jax.random.randint(key, (B, S + 3), 0, cfg.vocab)
+        batch_full = dict(_batch(cfg, key, B, S + 3), tokens=toks)
+        batch_pre = dict(_batch(cfg, key, B, S), tokens=toks[:, :S])
+        if "frontend" in batch_full:  # identical modality input for both passes
+            batch_pre["frontend"] = batch_full["frontend"]
+        off = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+        M = S + 3 + off
+        _, logits_full = lm.prefill(params, batch_full, max_len=M)
+        cache, logits = lm.prefill(params, batch_pre, max_len=M)
+        cur = S + off
+        for t in range(3):
+            cache, logits = lm.decode_step(params, cache, toks[:, S + t], jnp.int32(cur))
+            cur += 1
+        _, want = lm.prefill(params, batch_full, max_len=M)
+        got = np.asarray(logits, np.float32)
+        np.testing.assert_allclose(got, np.asarray(want[:, 0], np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+def test_moe_sharded_lowering(subproc):
+    """MoE EP all-to-all path on a real (1, 4) mesh with 8 experts."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.core.meshutil import make_mesh
+from repro.models.lm import LM
+from repro.models.sharding import Axes
+mesh = make_mesh((1, 4), ("data", "model"))
+cfg = configs.smoke("phi35_moe_42b")
+lm = LM(cfg, mesh, Axes(multi_pod=False), q_block=8, xent_chunks=2)
+key = jax.random.PRNGKey(0)
+with jax.set_mesh(mesh):
+    params = lm.init_params(key)
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+             "targets": jax.random.randint(key, (B, S), 0, cfg.vocab),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    loss, _ = jax.jit(lm.loss)(params, batch)
+    assert np.isfinite(float(loss)), loss
+print("MOE EP OK", float(loss))
+""", ndev=4)
+
+
+def test_prefill_decode_optimized_flags(mesh):
+    """Decode consistency holds under the (CPU-executable) optimized flags:
+    triangular prefill + dots remat + head-major cache."""
+    from repro.models.lm import PerfFlags
+    flags = PerfFlags(exact_causal_prefill=True, remat_policy="dots",
+                      hmajor_cache=True)
+    cfg = configs.smoke("glm4_9b")
+    lm = LM(cfg, mesh, AXES, q_block=4, xent_chunks=1, perf=flags)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 8
+    with jax.set_mesh(mesh):
+        params = lm.init_params(key)
+        toks = jax.random.randint(key, (B, S + 3), 0, cfg.vocab)
+        bf = {"tokens": toks, "targets": toks,
+              "mask": jnp.ones((B, S + 3), jnp.float32)}
+        M = S + 3
+        _, want = lm.prefill(params, bf, max_len=M)
+        cache, lg = lm.prefill(params, {"tokens": toks[:, :S]}, max_len=M)
+        cur = S
+        for t in range(3):
+            cache, lg = lm.decode_step(params, cache, toks[:, S + t], jnp.int32(cur))
+            cur += 1
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(want[:, 0], np.float32),
+                                   rtol=6e-2, atol=6e-2)

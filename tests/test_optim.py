@@ -1,0 +1,54 @@
+"""Optimizer unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamW, clip_by_global_norm, cosine_schedule
+
+
+def test_adamw_minimizes_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - jnp.asarray([1.0, 1.0])))
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 1.0], atol=1e-2)
+
+
+@given(scale=st.floats(1e-3, 1e3), max_norm=st.floats(0.1, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_clip_property(scale, max_norm):
+    g = {"a": jnp.full((4,), scale), "b": jnp.full((3, 3), -scale)}
+    clipped, gnorm = clip_by_global_norm(g, max_norm)
+    got = float(jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(clipped))))
+    assert got <= max_norm * 1.001 + 1e-6
+    want = float(jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(g))))
+    np.testing.assert_allclose(float(gnorm), want, rtol=1e-5)
+    if want <= max_norm:  # no-op below threshold
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100, min_frac=0.1)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 0.11
+    assert float(lr(jnp.int32(100))) >= 0.099
+    assert float(lr(jnp.int32(5))) < float(lr(jnp.int32(10)))
+
+
+def test_bf16_params_fp32_moments():
+    opt = AdamW(lr=1e-2)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    p2, s2, m = opt.update(g, state, params)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert int(s2.step) == 1

@@ -1,0 +1,54 @@
+"""Property tests for the Pencil alignment state (paper Secs. 3.4/3.5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.meshutil import make_mesh
+from repro.core.pencil import Pencil, group_size, make_pencil
+
+
+def _mesh():
+    return make_mesh((1, 1), ("p0", "p1"))  # trivial 1-device mesh: pure metadata
+
+
+@given(n0=st.integers(1, 300), n1=st.integers(1, 300), n2=st.integers(1, 300),
+       d0=st.integers(1, 8), d1=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_make_pencil_divisibility(n0, n1, n2, d0, d1):
+    mesh = _mesh()
+    p = make_pencil(mesh, (n0, n1, n2), ("p0", "p1", None), divisors=(d0, d1, 1))
+    for ext, log in zip(p.physical, p.logical):
+        assert ext >= log
+    assert p.physical[0] % d0 == 0 and p.physical[1] % d1 == 0
+    assert p.local_shape == p.physical  # 1-device mesh: local == global
+
+
+def test_exchanged_involution():
+    mesh = _mesh()
+    p = make_pencil(mesh, (8, 8, 8), ("p0", None, "p1"), divisors=(1, 1, 1))
+    q = p.exchanged(1, 0)       # axis1 takes p0, axis0 aligned
+    r = q.exchanged(0, 1)       # back
+    assert r.placement == p.placement
+    assert r.physical == p.physical
+
+
+def test_exchanged_validation():
+    mesh = _mesh()
+    p = make_pencil(mesh, (8, 8), ("p0", None), divisors=(1, 1))
+    with pytest.raises(ValueError):
+        p.exchanged(0, 1)       # v must be aligned
+    with pytest.raises(ValueError):
+        p.exchanged(1, 1)       # w must be distributed
+
+
+@given(v=st.integers(0, 2))
+@settings(max_examples=10, deadline=None)
+def test_with_axis_extent_repads(v):
+    mesh = _mesh()
+    p = make_pencil(mesh, (10, 12, 14), (None, "p0", "p1"), divisors=(1, 2, 2))
+    q = p.with_axis_extent(v, 7)
+    assert q.logical[v] == 7
+    grp = q.placement[v]
+    m = 1 if grp is None else group_size(mesh, grp)
+    assert q.physical[v] % m == 0 and q.physical[v] >= 7

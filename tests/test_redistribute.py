@@ -1,0 +1,91 @@
+"""Multi-device correctness of the paper's exchange (fused vs traditional)."""
+
+
+def test_exchange_all_pairs(subproc):
+    """Every (v, w) exchange over slab + pencil subgroups, both methods,
+    against the identity-on-global-array oracle (paper Eq. 20)."""
+    subproc("""
+import itertools, jax, jax.numpy as jnp, numpy as np
+from repro.core.meshutil import make_mesh
+from repro.core.pencil import make_pencil, pad_global, unpad_global
+from repro.core.redistribute import exchange
+
+mesh = make_mesh((2, 4), ("p0", "p1"))
+rng = np.random.default_rng(0)
+shape = (8, 12, 10, 6)
+
+for (v, w) in itertools.permutations(range(4), 2):
+    for method in ("fused", "traditional"):
+        placement = [None] * 4
+        placement[w] = "p1"
+        other = 0 if 0 not in (v, w) else (1 if 1 not in (v, w) else 2)
+        placement[other] = "p0"
+        divisors = [1] * 4
+        divisors[v] = 4; divisors[w] = 4
+        divisors[other] = 2
+        src = make_pencil(mesh, shape, tuple(placement), divisors=tuple(divisors))
+        x = rng.standard_normal(shape).astype(np.float32)
+        xs = jax.device_put(pad_global(jnp.asarray(x), src), src.sharding)
+        y, dst = exchange(xs, src, v=v, w=w, method=method)
+        assert dst.placement[v] == "p1" and dst.placement[w] is None
+        got = unpad_global(np.asarray(y), dst)
+        np.testing.assert_allclose(got, x, rtol=1e-6)
+print("EXCHANGE ALL PAIRS OK")
+""")
+
+
+def test_exchange_roundtrip_and_composed_groups(subproc):
+    """v->w then w->v is the identity; composed (tuple) subgroups work."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.meshutil import make_mesh
+from repro.core.pencil import make_pencil, pad_global, unpad_global
+from repro.core.redistribute import exchange
+
+mesh = make_mesh((2, 2, 2), ("a", "b", "c"))
+rng = np.random.default_rng(1)
+shape = (8, 8, 8)
+# composed subgroup ("a","b") acts as one size-4 group (paper Sec. 3.4)
+src = make_pencil(mesh, shape, (("a", "b"), "c", None), divisors=(4, 4, 4))
+x = rng.standard_normal(shape).astype(np.float32)
+xs = jax.device_put(pad_global(jnp.asarray(x), src), src.sharding)
+y, mid = exchange(xs, src, v=2, w=1, method="fused")
+z, back = exchange(y, mid, v=1, w=2, method="fused")
+assert back.placement == src.placement
+np.testing.assert_allclose(np.asarray(z), np.asarray(xs), rtol=1e-6)
+print("ROUNDTRIP OK")
+""")
+
+
+def test_fused_traditional_hlo_divergence(subproc):
+    """Structural claim of the paper: the fused path must contain NO
+    transpose-of-payload copy before the all-to-all; the traditional path
+    must contain one.  We check op counts in the optimized HLO."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np, re
+from functools import partial
+from repro.core.meshutil import make_mesh
+from repro.core.pencil import make_pencil
+from repro.core.redistribute import exchange_shard
+mesh = make_mesh((1, 8), ("data", "model"))
+shape = (64, 64, 32)
+src = make_pencil(mesh, shape, (None, "model", None), divisors=(8, 8, 1))
+
+def run(method):
+    fn = jax.shard_map(partial(exchange_shard, v=0, w=1, group="model", method=method),
+                       mesh=mesh, in_specs=src.spec, out_specs=src.exchanged(0, 1).spec,
+                       check_vma=False)
+    x = jax.ShapeDtypeStruct(shape, jnp.float32)
+    txt = jax.jit(fn).lower(x).compile().as_text()
+    return txt
+
+fused, trad = run("fused"), run("traditional")
+# the traditional path materializes the payload transpose (copy-of-transpose);
+# the fused path must not -- the layout change rides inside the all-to-all
+n_mat_fused = len(re.findall(r"copy\\(%transpose", fused))
+n_mat_trad = len(re.findall(r"copy\\(%transpose", trad))
+assert "all-to-all" in fused and "all-to-all" in trad
+assert n_mat_fused == 0, fused[:2000]
+assert n_mat_trad >= 1, trad[:2000]
+print("HLO DIVERGENCE OK", n_mat_fused, n_mat_trad)
+""")
