@@ -62,6 +62,12 @@ def lower_fft(shape, mesh_shape, axis_names, grid, *, real, method, impl="jnp"):
         "collective_s": acct["collectives"].get("total", 0.0) / ICI,
         "model_flops": 2 * plan.model_flops(),  # fwd + bwd
         "comm_model_bytes_per_dev": 2 * plan.comm_bytes_per_device(4 if real else 8),
+        # overlap-aware analytic wall time (core/redistribute.exchange_time_model):
+        # what the same plan would cost with the pipelined exchange engine
+        "model_time_s": 2 * plan.model_time_s(itemsize=4 if real else 8),
+        "model_time_pipelined_s": 2 * ParallelFFT(
+            mesh, shape, grid, real=real, method="pipelined",
+            impl=impl).model_time_s(itemsize=4 if real else 8),
     }
     dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: rec[k])
     rec["dominant"] = dom.replace("_s", "")

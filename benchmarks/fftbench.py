@@ -5,6 +5,9 @@ consecutive forward+backward transforms, repeated ``--outer`` times; we
 report the fastest outer iteration divided by inner (their "fastest of 50
 outers of 3").  ``--measure redistribution`` times an exchanges-only plan
 (the paper's "global redistribution" split); fft time = total - redist.
+``--compare`` times all four exchange engines {fused, traditional,
+pipelined, auto} on the same problem and reports one JSON table (pass
+``--tune-cache`` so the auto schedule round-trips to disk).
 
 Run via benchmarks.paperfigs which sets XLA_FLAGS for the device count.
 """
@@ -21,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def build_plan(shape, gridspec, ndev, *, real, method, impl):
+def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
+               tuner_cache=None):
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ParallelFFT
 
@@ -48,7 +52,8 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl):
         grid = ("p0", "p1", "p2")
     else:
         raise ValueError(gridspec)
-    return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl)
+    return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl,
+                       chunks=chunks, tuner_cache=tuner_cache)
 
 
 def exchanges_only(plan):
@@ -64,12 +69,16 @@ def exchanges_only(plan):
                                            plan.pencil_trace[1:])
               if isinstance(s, ExchangeStage)]
 
+    schedule = plan.schedule  # resolves "auto" to the tuned per-stage mix
+
     def run(block):
-        for st, before, after in stages:
+        for ex_i, (st, before, after) in enumerate(stages):
             # emulate the fft-stage shape change between exchanges
             if block.shape != tuple(np.array(before.local_shape)):
                 block = jnp.zeros(before.local_shape, block.dtype)
-            block = exchange_shard(block, st.v, st.w, st.group, method=plan.method)
+            method, chunks = schedule[ex_i]
+            block = exchange_shard(block, st.v, st.w, st.group,
+                                   method=method, chunks=chunks)
         return block
 
     first = stages[0][1]
@@ -78,11 +87,49 @@ def exchanges_only(plan):
     return jax.jit(fn), first
 
 
+METHODS = ("fused", "traditional", "pipelined", "auto")
+
+
+def _best_of(once, xg, *, outer, inner):
+    """Fastest outer iteration of ``inner`` consecutive applications."""
+    once(xg).block_until_ready()  # compile + warm
+    best = float("inf")
+    for _ in range(outer):
+        t0 = time.perf_counter()
+        v = xg
+        for _ in range(inner):
+            v = once(v)
+        v.block_until_ready()
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def _time_plan(plan, shape, args):
+    """Time one forward+backward round trip of ``plan`` (total measure)."""
+    rng = np.random.default_rng(0)
+    if args.real:
+        x = rng.standard_normal(shape).astype(np.float32)
+    else:
+        x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    from repro.core.pencil import pad_global
+
+    xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
+                        plan.input_pencil.sharding)
+    fwd, bwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
+    return _best_of(lambda v: bwd(fwd(v)), xg, outer=args.outer, inner=args.inner)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--shape", type=str, required=True)  # e.g. 128,128,128
     ap.add_argument("--grid", choices=["slab", "pencil", "grid3"], default="slab")
-    ap.add_argument("--method", choices=["fused", "traditional"], default="fused")
+    ap.add_argument("--method", choices=METHODS, default="fused")
+    ap.add_argument("--chunks", type=int, default=4,
+                    help="slice count for method=pipelined")
+    ap.add_argument("--tune-cache", type=str, default=None,
+                    help="schedule cache path for method=auto")
+    ap.add_argument("--compare", action="store_true",
+                    help="time all four methods and report one table")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--impl", default="jnp")
     ap.add_argument("--inner", type=int, default=3)
@@ -92,8 +139,23 @@ def main(argv=None):
 
     shape = tuple(int(s) for s in args.shape.split(","))
     ndev = len(jax.devices())
+    if args.compare:
+        out = {"shape": shape, "grid": args.grid, "real": bool(args.real),
+               "ndev": ndev, "methods": {}}
+        for method in METHODS:
+            plan = build_plan(shape, args.grid, ndev, real=args.real,
+                              method=method, impl=args.impl, chunks=args.chunks,
+                              tuner_cache=args.tune_cache)
+            out["methods"][method] = {
+                "best_s": _time_plan(plan, shape, args),
+                "schedule": [list(s) for s in plan.schedule],
+                "model_time_s": plan.model_time_s(itemsize=4 if args.real else 8),
+            }
+        print(json.dumps(out))
+        return
     plan = build_plan(shape, args.grid, ndev, real=args.real,
-                      method=args.method, impl=args.impl)
+                      method=args.method, impl=args.impl, chunks=args.chunks,
+                      tuner_cache=args.tune_cache)
 
     rng = np.random.default_rng(0)
     if args.real:
@@ -120,15 +182,7 @@ def main(argv=None):
         def once(v):
             return bwd(fwd(v))
 
-    once(xg).block_until_ready()  # compile + warm
-    best = float("inf")
-    for _ in range(args.outer):
-        t0 = time.perf_counter()
-        v = xg
-        for _ in range(args.inner):
-            v = once(v)
-        v.block_until_ready()
-        best = min(best, (time.perf_counter() - t0) / args.inner)
+    best = _best_of(once, xg, outer=args.outer, inner=args.inner)
     print(json.dumps({
         "shape": shape, "grid": args.grid, "method": args.method,
         "real": bool(args.real), "ndev": ndev, "measure": args.measure,

@@ -24,8 +24,8 @@ src = make_pencil(mesh, shape, ("p0", "p1", None), divisors=(4, 2, 1))
 xp = pad_global(jnp.asarray(x), src)
 xs = jax.device_put(xp, src.sharding)
 
-for method in ("fused", "traditional"):
-    y, dst = exchange(xs, src, v=2, w=1, method=method)
+for method in ("fused", "traditional", "pipelined"):
+    y, dst = exchange(xs, src, v=2, w=1, method=method, chunks=2)
     # oracle: exchange just realigns; global array unchanged
     got = unpad_global(np.asarray(y), dst)
     np.testing.assert_allclose(got, x, rtol=1e-6)

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.lm import LM
 from repro.models.sharding import Axes
 
@@ -32,7 +32,7 @@ for name in names:
     if cfg.family == "audio":
         batch["frontend"] = jax.random.normal(key, (B, S, cfg.d_model))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         (loss, metrics), grads = jax.jit(jax.value_and_grad(lm.loss, has_aux=True))(params, batch)
         assert jnp.isfinite(loss), (name, loss)
         gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))

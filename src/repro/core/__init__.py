@@ -4,12 +4,17 @@ Public API:
   decompose, AxisDecomp            — balanced block decomposition (Alg. 1)
   Pencil, make_pencil              — distributed-array alignment state
   exchange, exchange_shard         — the paper's fused v→w redistribution
+  exchange_shard_sliced            — the pipelined (sliced) exchange engine
   ParallelFFT                      — slab/pencil/d-dim distributed FFT
+                                     (method="fused"|"traditional"|
+                                      "pipelined"|"auto")
+  tuner                            — per-stage exchange-engine autotuner
 """
 
 from repro.core.decomp import AxisDecomp, decompose, local_lengths, pad_to_multiple, start_indices
 from repro.core.pencil import Pencil, group_size, make_pencil, pad_global, unpad_global
-from repro.core.redistribute import exchange, exchange_shard
+from repro.core.redistribute import (exchange, exchange_cost_bytes, exchange_shard,
+                                     exchange_shard_sliced, exchange_time_model)
 from repro.core.pfft import ParallelFFT
 
 __all__ = [
@@ -24,6 +29,9 @@ __all__ = [
     "pad_global",
     "unpad_global",
     "exchange",
+    "exchange_cost_bytes",
     "exchange_shard",
+    "exchange_shard_sliced",
+    "exchange_time_model",
     "ParallelFFT",
 ]

@@ -11,7 +11,10 @@ on a k-dimensional Cartesian mesh subgrid (k ≤ d-1): slab (k=1), pencil
 Every exchange is one call to :func:`repro.core.redistribute.exchange_shard`
 — the same ~40-line routine regardless of dimensionality, which is the
 paper's headline simplicity claim.  ``method`` selects the paper's fused
-all-to-all or the traditional transpose+all-to-all baseline.
+all-to-all ("fused"), the traditional transpose+all-to-all baseline
+("traditional"), the sliced exchange interleaved with the next stage's 1-D
+FFTs ("pipelined", comm/compute overlap), or the autotuned per-stage mix
+("auto", see :mod:`repro.core.tuner`).
 
 The whole plan executes inside a single ``shard_map``, so XLA sees the
 entire FFT↔collective pipeline and can schedule/overlap it (the TPU
@@ -33,7 +36,10 @@ from repro.core import fftcore
 from repro.core.meshutil import shard_map
 from repro.core.decomp import pad_to_multiple
 from repro.core.pencil import Group, Pencil, group_size, make_pencil, pad_global, unpad_global
-from repro.core.redistribute import exchange_shard
+from repro.core.redistribute import exchange_shard, exchange_shard_sliced
+
+#: (method, chunks) per ExchangeStage, in forward stage order
+Schedule = tuple[tuple[str, int], ...]
 
 # ---------------------------------------------------------------------------
 # Plan construction
@@ -66,8 +72,13 @@ class ParallelFFT:
       grid:   k mesh axis names (or tuples of names) decomposing array axes
               0..k-1, k ≤ d-1.  (C row-major convention, like the paper.)
       real:   r2c/c2r transform (real input, Hermitian-reduced last axis).
-      method: "fused" (paper) | "traditional" (baseline).
+      method: "fused" (paper) | "traditional" (baseline) |
+              "pipelined" (sliced exchange overlapped with next-stage FFTs) |
+              "auto" (per-stage micro-benchmarked schedule, cached on disk).
       impl:   local FFT implementation ("jnp" | "matmul").
+      chunks: slice count for method="pipelined" (ignored otherwise).
+      tuner_cache: path for method="auto"'s schedule cache (default:
+              $REPRO_TUNER_CACHE or ~/.cache/repro/fft_tuner.json).
     """
 
     def __init__(
@@ -79,12 +90,17 @@ class ParallelFFT:
         real: bool = False,
         method: str = "fused",
         impl: str = "jnp",
+        chunks: int = 4,
+        tuner_cache: str | None = None,
     ):
         d, k = len(shape), len(grid)
         if not 1 <= k <= d - 1:
             raise ValueError(f"need 1 <= len(grid)={k} <= d-1={d - 1}")
+        if method not in ("fused", "traditional", "pipelined", "auto"):
+            raise ValueError(f"unknown method {method!r}")
         self.mesh, self.shape, self.grid = mesh, tuple(shape), tuple(grid)
         self.real, self.method, self.impl = real, method, impl
+        self.chunks, self.tuner_cache = chunks, tuner_cache
         self.d, self.k = d, k
 
         sizes = [group_size(mesh, g) for g in grid]
@@ -122,18 +138,36 @@ class ParallelFFT:
         self.pencil_trace = tuple(pencils)
         self.output_pencil = cur
 
+    # -- schedule ------------------------------------------------------------
+
+    @property
+    def n_exchanges(self) -> int:
+        return sum(isinstance(s, ExchangeStage) for s in self.stages)
+
+    @cached_property
+    def schedule(self) -> Schedule:
+        """(method, chunks) per exchange stage, forward order.  Uniform for
+        the explicit methods; tuned (and disk-cached) for method="auto"."""
+        if self.method == "auto":
+            from repro.core import tuner
+
+            return tuner.get_or_tune(self, cache_path=self.tuner_cache)
+        c = self.chunks if self.method == "pipelined" else 1
+        return ((self.method, c),) * self.n_exchanges
+
     # -- executors ----------------------------------------------------------
 
     @cached_property
     def _forward_shard(self):
         return partial(_run_stages, stages=self.stages, pencils=self.pencil_trace,
-                       method=self.method, impl=self.impl, sign=fftcore.FORWARD)
+                       schedule=self.schedule, impl=self.impl, sign=fftcore.FORWARD)
 
     @cached_property
     def _backward_shard(self):
         stages, pencils = _reverse_plan(self.stages, self.pencil_trace)
         return partial(_run_stages, stages=stages, pencils=pencils,
-                       method=self.method, impl=self.impl, sign=fftcore.BACKWARD)
+                       schedule=self.schedule[::-1], impl=self.impl,
+                       sign=fftcore.BACKWARD)
 
     @cached_property
     def forward_padded(self):
@@ -167,33 +201,79 @@ class ParallelFFT:
     def model_flops(self) -> float:
         """5 N log2 N per 1-D complex transform, summed over the plan
         (the classic FFT nominal-flops convention; r2c counted as half)."""
-        total = 0.0
-        n_total = float(np.prod(self.shape, dtype=np.float64))
-        for st in self.stages:
-            if isinstance(st, FFTStage):
-                n = self.shape[st.axis] if st.axis == self.d - 1 else st.logical_n
-                batch = n_total / self.shape[st.axis] if st.axis == self.d - 1 else None
-                # batch = product of other axes' *current* logical extents
-                cur_logical = 1.0
-                for ax, ext in enumerate(self.shape):
-                    if ax != st.axis:
-                        cur_logical *= ext if ax != self.d - 1 or not self.real else (ext // 2 + 1)
-                flops = 5.0 * n * math.log2(max(n, 2)) * cur_logical
-                if st.real:
-                    flops *= 0.5
-                total += flops
-        return total
+        return sum(self._stage_flops(st) for st in self.stages
+                   if isinstance(st, FFTStage))
 
-    def comm_bytes_per_device(self, itemsize: int = 8) -> int:
-        """Bytes each device sends across all exchanges (roofline term)."""
-        from repro.core.redistribute import exchange_cost_bytes
+    def _stage_flops(self, st: FFTStage) -> float:
+        """Nominal flops of one FFT stage at its true logical length:
+        5 n log2 n per transform × the batch of other axes' logical extents
+        at that point of the plan (the last axis is Hermitian-reduced to
+        N/2+1 for every stage after the r2c one)."""
+        n = st.logical_n
+        batch = 1.0
+        for ax, ext in enumerate(self.shape):
+            if ax != st.axis:
+                batch *= ext if ax != self.d - 1 or not self.real else (ext // 2 + 1)
+        flops = 5.0 * n * math.log2(max(n, 2)) * batch
+        if st.real:
+            flops *= 0.5
+        return flops
+
+    def comm_bytes_per_device(self, itemsize: int = 8, *, method: str | None = None) -> int:
+        """Bytes each device sends across all exchanges (roofline term).
+        The wire payload is method-independent; ``method`` adds the
+        materialized local-copy traffic the engine pays on top (traditional:
+        pack+unpack; pipelined: slice concat; fused: none)."""
+        from repro.core.redistribute import exchange_cost_bytes, exchange_local_copy_elems
 
         total = 0
         cur = self.input_pencil
         for st, pen in zip(self.stages, self.pencil_trace[1:]):
             if isinstance(st, ExchangeStage):
                 total += exchange_cost_bytes(cur, st.v, st.w) * itemsize
+                if method is not None:
+                    total += exchange_local_copy_elems(cur, st.v, st.w, method=method) * itemsize
             cur = pen
+        return total
+
+    def model_time_s(
+        self,
+        *,
+        itemsize: int = 8,
+        peak_flops: float = 197e12,
+        ici_bw: float = 50e9,
+        hbm_bw: float = 819e9,
+        schedule: Schedule | None = None,
+    ) -> float:
+        """Overlap-aware modeled wall time of one forward transform: FFT
+        stages at ``peak_flops``; each exchange via
+        :func:`repro.core.redistribute.exchange_time_model`, which credits a
+        pipelined exchange with hiding the following stage's FFT compute."""
+        from repro.core.redistribute import exchange_time_model
+
+        schedule = schedule if schedule is not None else self.schedule
+        ndev = group_size(self.mesh, tuple(n for g in self.grid for n in
+                                           ((g,) if isinstance(g, str) else g)))
+        total, ex_i, i = 0.0, 0, 0
+        stages = self.stages
+        while i < len(stages):
+            st = stages[i]
+            if isinstance(st, ExchangeStage):
+                method, chunks = schedule[ex_i]
+                ex_i += 1
+                src_pen = self.pencil_trace[i]  # state before this exchange
+                nxt = stages[i + 1] if i + 1 < len(stages) else None
+                fft_s = 0.0
+                if isinstance(nxt, FFTStage) and nxt.axis == st.w:
+                    fft_s = self._stage_flops(nxt) / ndev / peak_flops
+                    i += 1  # folded into the exchange term
+                total += exchange_time_model(
+                    src_pen, st.v, st.w, itemsize=itemsize, method=method,
+                    chunks=chunks, ici_bw=ici_bw, hbm_bw=hbm_bw,
+                    overlap_compute_s=fft_s)
+            else:
+                total += self._stage_flops(st) / ndev / peak_flops
+            i += 1
         return total
 
 
@@ -225,16 +305,49 @@ def _reverse_plan(stages, pencils):
     return tuple(rev_stages), tuple(rev_pencils)
 
 
-def _run_stages(block, *, stages, pencils, method, impl, sign):
-    """Execute the plan on one shard (inside shard_map)."""
+def _run_stages(block, *, stages, pencils, schedule, impl, sign):
+    """Execute the plan on one shard (inside shard_map).  ``schedule`` gives
+    (method, chunks) per exchange stage, in this plan's stage order; a
+    pipelined exchange followed by the FFT of its newly-aligned axis (always
+    the case in forward and backward plans) is emitted interleaved so XLA
+    can overlap each slice's collective with the previous slice's FFT."""
     cur = pencils[0]
-    for st, nxt in zip(stages, pencils[1:]):
+    ex_i = i = 0
+    while i < len(stages):
+        st = stages[i]
         if isinstance(st, ExchangeStage):
-            block = exchange_shard(block, st.v, st.w, st.group, method=method)
+            method, chunks = schedule[ex_i]
+            ex_i += 1
+            nxt_st = stages[i + 1] if i + 1 < len(stages) else None
+            if (method == "pipelined" and chunks > 1
+                    and isinstance(nxt_st, FFTStage) and nxt_st.axis == st.w):
+                block = _exchange_then_fft(
+                    block, st, nxt_st, pencils[i + 1], pencils[i + 2],
+                    chunks=chunks, impl=impl, sign=sign)
+                cur = pencils[i + 2]
+                i += 2
+                continue
+            block = exchange_shard(block, st.v, st.w, st.group,
+                                   method=method, chunks=chunks)
         else:
-            block = _fft_padded_axis(block, st, cur, nxt, impl=impl, sign=sign)
-        cur = nxt
+            block = _fft_padded_axis(block, st, cur, pencils[i + 1], impl=impl, sign=sign)
+        cur = pencils[i + 1]
+        i += 1
     return block
+
+
+def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
+                       mid: Pencil, after: Pencil, *, chunks, impl, sign):
+    """Pipelined exchange fused with the next stage's 1-D FFT: issue the
+    per-slice all-to-alls interleaved with the per-slice transforms.  Each
+    slice is a disjoint v-subrange of the fused output, so slicing commutes
+    with the FFT along ``w`` and the concat reproduces the unpipelined
+    result; the payoff is that XLA may run slice i+1's collective DMA under
+    slice i's FFT compute."""
+    pieces = exchange_shard_sliced(block, ex.v, ex.w, ex.group, chunks=chunks)
+    out = [_fft_padded_axis(p, fft_st, mid, after, impl=impl, sign=sign)
+           for p in pieces]
+    return out[0] if len(out) == 1 else jnp.concatenate(out, axis=ex.v)
 
 
 def _fft_padded_axis(block, st: FFTStage, cur: Pencil, nxt: Pencil, *, impl, sign):

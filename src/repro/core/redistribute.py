@@ -1,6 +1,6 @@
 """Global redistribution (the paper's contribution — Sec. 3.3.2, Alg. 2/3).
 
-Two implementations of the v→w exchange of a distributed array:
+Three implementations of the v→w exchange of a distributed array:
 
 ``method="fused"`` — the paper's method.  One ``lax.all_to_all`` with
     ``split_axis=v, concat_axis=w``: the strided split/concat description
@@ -17,6 +17,22 @@ Two implementations of the v→w exchange of a distributed array:
     the permuted chunk-major layout (FFTW's "transposed out", Eq. 19) —
     callers must handle the layout.
 
+``method="pipelined"`` — the fused exchange sliced into ``chunks`` pieces
+    along the *post-exchange v shard* so each slice is an independent
+    all-to-all whose output is one contiguous sub-range of the fused
+    output.  The union of the slices is bit-identical to ``fused``; the
+    point is scheduling freedom: a caller (``pfft._run_stages``) can
+    interleave each slice's collective with the next stage's 1-D FFT on the
+    previous slice, letting XLA overlap collective DMA with MXU/VPU compute
+    instead of serializing exchange→transform.  This is the TPU analogue of
+    the paper's note that the single-collective formulation "enables future
+    speedups from optimizations in the internal datatype handling engines"
+    (cf. partitioned/persistent-collective MPI FFTs, arXiv:2306.16589).
+
+``method="auto"`` (plan level only, see :mod:`repro.core.tuner`) —
+    micro-benchmarks {fused, traditional, pipelined×chunks} per exchange
+    stage of a plan and caches the winning schedule on disk.
+
 Both operate *per shard* (inside ``shard_map``) via ``exchange_shard`` and
 at the jit level on globally-sharded arrays via ``exchange``.
 """
@@ -27,13 +43,18 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh
 
-from repro.core.meshutil import shard_map
+from repro.core.decomp import local_lengths
+from repro.core.meshutil import axis_size as _mesh_axis_size, shard_map
 from repro.core.pencil import Group, Pencil, group_names, group_size
 
-Method = str  # "fused" | "traditional"
+Method = str  # "fused" | "traditional" | "pipelined"
+
+#: chunk counts the tuner sweeps for the pipelined method
+PIPELINE_CHUNK_CANDIDATES = (2, 4, 8)
 
 
 def exchange_shard(
@@ -43,6 +64,7 @@ def exchange_shard(
     group: Group,
     *,
     method: Method = "fused",
+    chunks: int = 1,
     transposed_out: bool = False,
 ) -> jax.Array:
     """Per-shard v→w exchange over mesh subgroup ``group``.
@@ -50,6 +72,9 @@ def exchange_shard(
     Input block: axis ``v`` full (locally complete), axis ``w`` holds this
     rank's shard.  Output block: axis ``v`` holds this rank's shard, axis
     ``w`` full.  Mirrors the paper's EXCHANGE(P, A, v, B, w) (Alg. 3).
+
+    ``chunks`` only affects ``method="pipelined"``; ``transposed_out`` only
+    affects ``method="traditional"``.
     """
     if v == w:
         raise ValueError("exchange requires v != w (paper Alg. 3)")
@@ -60,6 +85,10 @@ def exchange_shard(
         # The paper's method: one generalized all-to-all; the split/concat
         # axes are the "subarray datatype" description.
         return lax.all_to_all(block, axis_name, split_axis=v, concat_axis=w, tiled=True)
+
+    if method == "pipelined":
+        pieces = exchange_shard_sliced(block, v, w, group, chunks=chunks)
+        return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=v)
 
     if method == "traditional":
         m = _axis_size(axis_name)
@@ -89,9 +118,54 @@ def exchange_shard(
     raise ValueError(f"unknown method {method!r}")
 
 
+def exchange_shard_sliced(
+    block: jax.Array,
+    v: int,
+    w: int,
+    group: Group,
+    *,
+    chunks: int,
+) -> list[jax.Array]:
+    """The fused v→w exchange as ``chunks`` independent per-slice
+    all-to-alls (the ``pipelined`` engine).
+
+    The input's v axis is viewed as ``(m, b)`` — ``m`` the subgroup size,
+    ``b = n_v/m`` the post-exchange shard extent — and sliced along ``b``.
+    Slice ``i``'s all-to-all splits the ``m`` factor across ranks and
+    concatenates along ``w``, so rank ``r``'s slice ``i`` output is exactly
+    rows ``[r*b + off_i, r*b + off_i + len_i)`` of the fused output:
+    concatenating the slices along ``v`` reproduces ``fused`` bit for bit,
+    while each slice remains a standalone collective XLA may overlap with
+    unrelated compute.
+    """
+    names = group_names(group)
+    axis_name = names[0] if len(names) == 1 else names
+    m = _axis_size(axis_name)
+    nv = block.shape[v]
+    if nv % m != 0:
+        raise ValueError(f"axis v={v} extent {nv} not divisible by group size {m}")
+    b = nv // m
+    sizes = [n for n in local_lengths(b, max(1, min(chunks, b))) if n > 0]
+    # view v as (m, b); the concat axis shifts right if it follows v
+    shape = list(block.shape)
+    shape[v : v + 1] = [m, b]
+    y = block.reshape(shape)
+    w_eff = w if w < v else w + 1
+    pieces = []
+    off = 0
+    for n in sizes:
+        piece = lax.slice_in_dim(y, off, off + n, axis=v + 1)
+        off += n
+        p = lax.all_to_all(piece, axis_name, split_axis=v, concat_axis=w_eff, tiled=True)
+        # p's m-factor axis now has extent 1: merge (1, n) -> (n,)
+        pshape = list(p.shape)
+        pshape[v : v + 2] = [n]
+        pieces.append(p.reshape(pshape))
+    return pieces
+
+
 def _axis_size(axis_name) -> int:
-    size = lax.axis_size(axis_name)
-    return int(size)
+    return _mesh_axis_size(axis_name)
 
 
 def exchange(
@@ -101,12 +175,14 @@ def exchange(
     w: int,
     *,
     method: Method = "fused",
+    chunks: int = 1,
 ) -> tuple[jax.Array, Pencil]:
     """Jit-level v→w exchange of a globally-sharded array.
 
-    ``x`` must be laid out per ``src`` (axis v aligned... no: axis v aligned
-    on *output*).  Per paper Eq. (20): input has axis w distributed / axis v
-    aligned; output has axis v distributed / axis w aligned.  Returns the
+    ``x`` must be laid out per ``src``: axis ``v`` aligned (locally
+    complete) and axis ``w`` distributed on *input*; the paper's Eq. (20)
+    contract is that the output has the roles swapped — axis ``v``
+    distributed over ``w``'s subgroup and axis ``w`` aligned.  Returns the
     redistributed array and its Pencil.
     """
     if not src.aligned(v):
@@ -116,7 +192,7 @@ def exchange(
         raise ValueError(f"input axis w={w} must be distributed; placement={src.placement}")
     dst = src.exchanged(v, w)
     fn = shard_map(
-        partial(exchange_shard, v=v, w=w, group=group, method=method),
+        partial(exchange_shard, v=v, w=w, group=group, method=method, chunks=chunks),
         mesh=src.mesh,
         in_specs=src.spec,
         out_specs=dst.spec,
@@ -125,11 +201,55 @@ def exchange(
     return fn(x), dst
 
 
-def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
-    """Bytes each rank sends in the exchange (itemsize excluded): the full
-    local block minus the chunk it keeps.  Used by the roofline model."""
-    import numpy as np
+# ---------------------------------------------------------------------------
+# Cost / time models (roofline + tuner priors)
+# ---------------------------------------------------------------------------
 
+
+def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
+    """Elements each rank sends in the exchange (itemsize excluded): the
+    full local block minus the chunk it keeps.  Identical for all methods —
+    the wire payload is a property of the redistribution, not the engine.
+    Used by the roofline model."""
     m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
     local = int(np.prod(src.local_shape, dtype=np.int64))
     return local * (m - 1) // m
+
+
+def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "fused") -> int:
+    """Elements of *materialized local copies* the method pays on top of the
+    wire payload: traditional's pack+unpack transposes touch the local block
+    twice; pipelined's final concat materializes it once; fused pays none
+    (the layout change rides inside the collective)."""
+    local = int(np.prod(src.local_shape, dtype=np.int64))
+    return {"fused": 0, "pipelined": local, "traditional": 2 * local}.get(method, 0)
+
+
+def exchange_time_model(
+    src: Pencil,
+    v: int,
+    w: int,
+    *,
+    itemsize: int = 8,
+    method: Method = "fused",
+    chunks: int = 1,
+    ici_bw: float = 50e9,
+    hbm_bw: float = 819e9,
+    overlap_compute_s: float = 0.0,
+) -> float:
+    """Overlap-aware modeled seconds for one exchange (+ the 1-D FFT stage
+    that follows it, whose time the caller passes as ``overlap_compute_s``).
+
+    fused/traditional serialize collective then compute; pipelined with c
+    slices exposes only the first slice's collective and the last slice's
+    compute, overlapping the rest:
+
+        T = T_comm/c + max(T_comm, T_fft)·(c-1)/c + T_fft/c
+    """
+    comm_s = exchange_cost_bytes(src, v, w) * itemsize / ici_bw
+    copy_s = exchange_local_copy_elems(src, v, w, method=method) * itemsize / hbm_bw
+    if method == "pipelined" and chunks > 1:
+        c = chunks
+        pipe = comm_s / c + max(comm_s, overlap_compute_s) * (c - 1) / c + overlap_compute_s / c
+        return pipe + copy_s
+    return comm_s + overlap_compute_s + copy_s

@@ -1,0 +1,161 @@
+"""Per-plan exchange-schedule autotuner (``ParallelFFT(method="auto")``).
+
+The paper's single-collective formulation leaves the *engine* of each
+exchange open — the MPI analogue is the library's freedom to implement
+``MPI_ALLTOALLW`` however it likes, and FLUPS (arXiv:2211.07777) shows the
+winning strategy is shape/topology dependent.  Here the candidate engines
+per exchange stage are ``fused``, ``traditional`` and
+``pipelined×chunks∈{2,4,8}`` (comm/compute overlap, arXiv:2306.16589
+lineage); this module micro-benchmarks each candidate on the stage's real
+shapes (the exchange plus the 1-D FFT it feeds, so overlap is priced in)
+and caches the winning schedule on disk keyed by
+(mesh shape, global shape, grid, dtype, real, impl).
+
+Cache location: ``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/fft_tuner.json``;
+an in-process memo avoids re-reading the file per plan.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meshutil import shard_map
+from repro.core.redistribute import PIPELINE_CHUNK_CANDIDATES, exchange_shard
+
+#: (method, chunks) candidates benchmarked per exchange stage
+DEFAULT_CANDIDATES: tuple[tuple[str, int], ...] = (
+    ("fused", 1),
+    ("traditional", 1),
+    *(("pipelined", c) for c in PIPELINE_CHUNK_CANDIDATES),
+)
+
+_MEMO: dict[str, tuple[tuple[str, int], ...]] = {}
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get("REPRO_TUNER_CACHE")
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "fft_tuner.json"
+
+
+def plan_key(plan, candidates=DEFAULT_CANDIDATES) -> str:
+    """Cache key: everything that determines the stage shapes, the engines
+    swept, and the hardware the timings are valid for."""
+    mesh_sig = tuple(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
+    dtype = "float32->complex64" if plan.real else "complex64"
+    return json.dumps(
+        {"mesh": mesh_sig, "shape": plan.shape, "grid": plan.grid,
+         "dtype": dtype, "real": plan.real, "impl": plan.impl,
+         "backend": jax.default_backend(),
+         "candidates": sorted(f"{m}@{c}" for m, c in candidates)},
+        sort_keys=True, default=str)
+
+
+def load_cache(path: Path) -> dict:
+    try:
+        return json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def save_cache(path: Path, data: dict) -> bool:
+    try:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(data, indent=1))
+        return True
+    except OSError:
+        return False  # read-only FS etc.: tuning still works, just uncached
+
+
+def get_or_tune(plan, *, cache_path: str | None = None,
+                candidates=DEFAULT_CANDIDATES) -> tuple[tuple[str, int], ...]:
+    """Return the tuned (method, chunks) per exchange stage for ``plan``,
+    consulting the in-process memo, then the disk cache, then benchmarking."""
+    path = Path(cache_path) if cache_path else default_cache_path()
+    key = plan_key(plan, candidates)
+    memo_key = f"{path}|{key}"
+    if memo_key in _MEMO:
+        return _MEMO[memo_key]
+    disk = load_cache(path)
+    if key in disk:
+        sched = tuple((str(m), int(c)) for m, c in disk[key]["schedule"])
+    else:
+        sched, timings = tune_plan(plan, candidates=candidates)
+        disk[key] = {"schedule": [list(s) for s in sched], "timings": timings}
+        save_cache(path, disk)
+    _MEMO[memo_key] = sched
+    return sched
+
+
+def tune_plan(plan, *, candidates=DEFAULT_CANDIDATES, repeats: int = 3,
+              inner: int = 2):
+    """Micro-benchmark every candidate engine for every exchange stage of
+    ``plan`` (each stage timed together with the 1-D FFT it feeds, so a
+    pipelined candidate gets credit for overlap) and return
+    (schedule, timings) with ``timings[stage][method@chunks] = seconds``."""
+    from repro.core.pfft import ExchangeStage
+
+    schedule: list[tuple[str, int]] = []
+    timings: dict[str, dict[str, float]] = {}
+    for si, st in enumerate(plan.stages):
+        if not isinstance(st, ExchangeStage):
+            continue
+        per = {}
+        for method, chunks in candidates:
+            try:
+                per[f"{method}@{chunks}"] = _time_stage(
+                    plan, si, method, chunks, repeats=repeats, inner=inner)
+            except Exception as e:  # candidate invalid for this shape
+                per[f"{method}@{chunks}"] = float("inf")
+                per[f"{method}@{chunks}:error"] = repr(e)[:200]
+        best = min((k for k in per if ":" not in k), key=lambda k: per[k])
+        method, chunks = best.split("@")
+        schedule.append((method, int(chunks)))
+        timings[f"stage{si}"] = per  # errors kept: an inf needs its reason
+    return tuple(schedule), timings
+
+
+def _time_stage(plan, si: int, method: str, chunks: int, *, repeats: int,
+                inner: int) -> float:
+    """Wall-time one exchange stage (+ its following FFT) under one engine."""
+    from repro.core import fftcore
+    from repro.core.pfft import FFTStage, _exchange_then_fft, _fft_padded_axis
+
+    st = plan.stages[si]
+    before = plan.pencil_trace[si]
+    follow = plan.stages[si + 1] if si + 1 < len(plan.stages) else None
+    has_fft = isinstance(follow, FFTStage) and follow.axis == st.w
+    out_pen = plan.pencil_trace[si + 2] if has_fft else plan.pencil_trace[si + 1]
+
+    def run(block):
+        if has_fft and method == "pipelined" and chunks > 1:
+            return _exchange_then_fft(
+                block, st, follow, plan.pencil_trace[si + 1], out_pen,
+                chunks=chunks, impl=plan.impl, sign=fftcore.FORWARD)
+        block = exchange_shard(block, st.v, st.w, st.group,
+                               method=method, chunks=chunks)
+        if has_fft:
+            block = _fft_padded_axis(block, follow, plan.pencil_trace[si + 1],
+                                     out_pen, impl=plan.impl, sign=fftcore.FORWARD)
+        return block
+
+    fn = jax.jit(shard_map(run, mesh=plan.mesh, in_specs=before.spec,
+                           out_specs=out_pen.spec, check_vma=False))
+    x = jax.device_put(jnp.zeros(before.physical, jnp.complex64), before.sharding)
+    jax.block_until_ready(fn(x))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            y = fn(x)
+        jax.block_until_ready(y)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best

@@ -33,6 +33,8 @@ import time
 from pathlib import Path
 
 import jax
+
+from repro.core.meshutil import set_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -94,7 +96,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, sp_mode="none",
     aparams = lm.abstract_params()
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if kind == "train":
             optimizer = AdamW(lr=1e-4)
             aopt = jax.eval_shape(optimizer.init, aparams)

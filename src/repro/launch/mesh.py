@@ -12,21 +12,22 @@ device state (the dry-run pins the device count before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.core.meshutil import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     assert n % model == 0, (n, model)
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 # TPU v5e hardware constants (roofline; per assignment)

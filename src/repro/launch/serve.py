@@ -15,6 +15,8 @@ import argparse
 import time
 
 import jax
+
+from repro.core.meshutil import set_mesh
 import jax.numpy as jnp
 import numpy as np
 
@@ -45,7 +47,7 @@ def main(argv=None):
             batch_sharded=args.batch % mesh.shape["data"] == 0)
 
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = lm.init_params(key)
         B, S = args.batch, args.prompt_len
         off = cfg.n_frontend_tokens if cfg.family == "vlm" else 0

@@ -400,6 +400,8 @@ def ulysses_attention(q, k, v, mesh, *, tp_axis: str, causal: bool,
     from jax.sharding import PartitionSpec as P
 
     spec = P(None, tp_axis, None, None)
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
-                       out_specs=spec, check_vma=False)
+    from repro.core.meshutil import shard_map as _shard_map
+
+    fn = _shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
+                    out_specs=spec, check_vma=False)
     return fn(q, k, v)

@@ -28,6 +28,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.meshutil import axis_size as _axis_size, shard_map as _shard_map
+
 from repro.models.layers import dense_init, mlp_apply, mlp_init
 
 
@@ -106,7 +108,7 @@ def _dispatch_shard(p, x, *, top_k: int, n_experts: int, mlp_kind: str,
     """Per-shard body (inside shard_map): x (B_loc, S_loc, D)."""
     B, S, D = x.shape
     N = B * S
-    ep = lax.axis_size(ep_axis)
+    ep = _axis_size(ep_axis)
     E, E_loc = n_experts, n_experts // ep
     xt = x.reshape(N, D)
 
@@ -162,7 +164,7 @@ def moe_apply_a2a(p, x, mesh, *, cfg, mlp_kind: str, dp_axes, ep_axis: str,
     if "shared" in p:
         pspec["shared"] = jax.tree.map(lambda _: P(), p["shared"])
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         partial(_dispatch_shard, top_k=cfg.top_k, n_experts=cfg.n_experts,
                 mlp_kind=mlp_kind, ep_axis=ep_axis,
                 capacity_factor=cfg.capacity_factor),
@@ -185,7 +187,7 @@ def moe_apply_a2a(p, x, mesh, *, cfg, mlp_kind: str, dp_axes, ep_axis: str,
 def _local_shard(p, x, *, top_k: int, n_experts: int, mlp_kind: str, ep_axis: str):
     B, S, D = x.shape
     N = B * S
-    ep = lax.axis_size(ep_axis)
+    ep = _axis_size(ep_axis)
     E_loc = n_experts // ep
     r = lax.axis_index(ep_axis)
     xt = x.reshape(N, D)
@@ -213,7 +215,7 @@ def moe_apply_local(p, x, mesh, *, cfg, mlp_kind: str, dp_axes, ep_axis: str,
             pspec[k] = P(ep_axis, None, None)
     if "shared" in p:
         pspec["shared"] = jax.tree.map(lambda _: P(), p["shared"])
-    fn = jax.shard_map(
+    fn = _shard_map(
         partial(_local_shard, top_k=cfg.top_k, n_experts=cfg.n_experts,
                 mlp_kind=mlp_kind, ep_axis=ep_axis),
         mesh=mesh, in_specs=(pspec, xspec), out_specs=(xspec, P(), P()),

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.meshutil import axis_size as _axis_size
+
 
 def _quant(x, axis=-1):
     """Symmetric per-row int8 quantization; returns (q, scale)."""
@@ -44,7 +46,7 @@ def _dequant(q, scale):
 def _reduce_shard(flat, axis_name: str):
     """Per-shard body: int8 reduce-scatter + all-gather of one flat fp32
     vector whose length is divisible by the group size."""
-    G = lax.axis_size(axis_name)
+    G = _axis_size(axis_name)
     n = flat.shape[0]
     chunks = flat.reshape(G, n // G)
     q, s = _quant(chunks)                                   # (G, n/G) int8 + (G,1)
@@ -57,43 +59,71 @@ def _reduce_shard(flat, axis_name: str):
     return _dequant(q2, s2).reshape(n)
 
 
+def _flatten_padded(grads, G):
+    """Flatten a pytree to one fp32 vector padded to a multiple of ``G``
+    (the wire layout both the collective and its local estimate must share)."""
+    flat, tdef = jax.tree.flatten(grads)
+    vec = jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in flat])
+    pad = -vec.size % G
+    if pad:
+        vec = jnp.pad(vec, (0, pad))
+    return vec, flat, tdef
+
+
+def _unflatten(out, flat, tdef):
+    outs = []
+    off = 0
+    for x in flat:
+        outs.append(out[off:off + x.size].reshape(x.shape).astype(x.dtype))
+        off += x.size
+    return tdef.unflatten(outs)
+
+
 def compressed_psum(grads, mesh, axis_name: str = "data"):
     """All-reduce a grad pytree over ``axis_name`` with int8 payloads.
 
     Call inside shard_map/jit on *per-device partial* gradients (e.g. the
     per-microbatch grads before DP averaging).  Returns the summed tree.
     """
-    flat, tdef = jax.tree.flatten(grads)
-    sizes = [x.size for x in flat]
+    vec, flat, tdef = _flatten_padded(grads, mesh.shape[axis_name])
+    out = _reduce_shard(vec, axis_name)
+    return _unflatten(out, flat, tdef)
+
+
+def reduce_local_roundtrip(grads, mesh, axis_name: str = "data"):
+    """This rank's contribution to :func:`compressed_psum` after the wire
+    quantization: same flatten/pad/per-chunk-scale layout as
+    ``_reduce_shard``, minus the collective.  This is the rank-local lossy
+    estimate error feedback must take residuals against — NOT the reduced
+    sum the collective returns."""
     G = mesh.shape[axis_name]
-    vec = jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in flat])
-    pad = -vec.size % G
-    if pad:
-        vec = jnp.pad(vec, (0, pad))
-    out = _reduce_shard(vec, axis_name)[:sum(sizes) + 0]
-    outs = []
-    off = 0
-    for x, n in zip(flat, sizes):
-        outs.append(out[off:off + n].reshape(x.shape).astype(x.dtype))
-        off += n
-    return tdef.unflatten(outs)
+    vec, flat, tdef = _flatten_padded(grads, G)
+    q, s = _quant(vec.reshape(G, vec.size // G))
+    return _unflatten(_dequant(q, s).reshape(-1), flat, tdef)
 
 
 class ErrorFeedback:
     """Error-feedback state: e <- (g + e) - Q(g + e), applied around any
-    lossy ``compress_fn``.  Pure container; state is a grads-like pytree."""
+    lossy ``compress_fn``.  Pure container; state is a grads-like pytree.
+
+    When ``compress_fn`` also *reduces* over ranks (e.g.
+    :func:`compressed_psum` returns the G-rank sum), pass ``local_fn`` —
+    the rank-local lossy estimate of this rank's own contribution — so the
+    residual is what *this rank's* channel dropped; taking it against the
+    reduced sum would inject a -(G-1)·g bias that swamps learning."""
 
     @staticmethod
     def init(grads_like):
         return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
 
     @staticmethod
-    def apply(grads, err, compress_fn):
+    def apply(grads, err, compress_fn, local_fn=None):
         """Returns (compressed_estimate, new_err)."""
         corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, err)
         sent = compress_fn(corrected)
+        local = sent if local_fn is None else local_fn(corrected)
         new_err = jax.tree.map(lambda c, s: c - s.astype(jnp.float32),
-                               corrected, sent)
+                               corrected, local)
         return sent, new_err
 
 

@@ -34,6 +34,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager, load_checkpoint
+from repro.core.meshutil import set_mesh, shard_map as _shard_map
 from repro.data import SyntheticLMData, make_batch_specs
 from repro.models.lm import LM
 from repro.optim import AdamW, OptState, cosine_schedule
@@ -74,7 +75,8 @@ class Trainer:
         if tc.grad_compression == "int8":
             from jax.sharding import PartitionSpec as P
 
-            from repro.optim.compress import ErrorFeedback, compressed_psum
+            from repro.optim.compress import (ErrorFeedback, compressed_psum,
+                                              reduce_local_roundtrip)
 
             dp = lm.axes.dp
             lm_local = LM(lm.cfg, lm.mesh, lm.axes, q_block=lm.q_block,
@@ -89,7 +91,9 @@ class Trainer:
                         lm_local.loss, has_aux=True)(p, b)
                     e = jax.tree.map(lambda x: x[0], e)
                     g, err2 = ErrorFeedback.apply(
-                        g, e, lambda c: compressed_psum(c, self.mesh, dp[-1]))
+                        g, e, lambda c: compressed_psum(c, self.mesh, dp[-1]),
+                        local_fn=lambda c: reduce_local_roundtrip(
+                            c, self.mesh, dp[-1]))
                     loss = jax.lax.pmean(loss, dp[-1])
                     err2 = jax.tree.map(lambda x: x[None], err2)
                     return loss, g, err2
@@ -98,7 +102,7 @@ class Trainer:
                 espec = jax.tree.map(lambda x: P(dp[-1], *(None,) * (x.ndim - 1)),
                                      err)
                 bspec = jax.tree.map(lambda x: P(dp, *(None,) * (x.ndim - 1)), batch)
-                loss, grads, err2 = jax.shard_map(
+                loss, grads, err2 = _shard_map(
                     shard_loss_grads, mesh=self.mesh,
                     in_specs=(aparams, espec, bspec),
                     out_specs=(P(), aparams, espec), check_vma=False)(
@@ -128,7 +132,7 @@ class Trainer:
     # -- state ----------------------------------------------------------------
 
     def init_state(self, seed: int = 0):
-        with jax.set_mesh(self.mesh):
+        with set_mesh(self.mesh):
             params = jax.jit(self.lm.init_params, out_shardings=self.pshard)(
                 jax.random.PRNGKey(seed))
             opt_state = jax.jit(self.opt.init, out_shardings=self.oshard)(params)

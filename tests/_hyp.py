@@ -1,0 +1,129 @@
+"""Hypothesis shim: property tests degrade to a fixed seed-case sweep when
+``hypothesis`` is not installed (it is a dev-only dependency, see
+requirements-dev.txt).
+
+Usage in tests (drop-in for the real import)::
+
+    from _hyp import given, settings, strategies as st
+
+With hypothesis installed this re-exports the real thing.  Without it,
+``given`` runs the test once per deterministic example: the strategy
+bounds (both endpoints) plus seeded random draws — far weaker than real
+property testing, but it keeps every test module collectable and the
+checked invariants exercised on a dependency-light CPU container.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import math
+
+    import numpy as np
+
+    #: examples per test in fallback mode (bounds + random draws)
+    FALLBACK_MAX_EXAMPLES = 12
+
+    class _Strategy:
+        def example(self, rng):
+            raise NotImplementedError
+
+        def bounds(self):
+            return []
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+        def bounds(self):
+            return [self.lo, self.hi]
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def example(self, rng):
+            # log-uniform when the range spans decades (matches how the
+            # tests use floats: scales, norms)
+            if self.lo > 0 and self.hi / self.lo > 100:
+                return float(math.exp(rng.uniform(math.log(self.lo), math.log(self.hi))))
+            return float(rng.uniform(self.lo, self.hi))
+
+        def bounds(self):
+            return [self.lo, self.hi]
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+        def bounds(self):
+            return [self.elements[0], self.elements[-1]]
+
+    class strategies:  # noqa: N801 — mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+    def settings(*, max_examples=None, deadline=None, **_ignored):
+        """Records max_examples on the test for ``given`` to cap against."""
+
+        def deco(fn):
+            if max_examples is not None:
+                fn._fallback_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            n = min(getattr(fn, "_fallback_max_examples", FALLBACK_MAX_EXAMPLES),
+                    FALLBACK_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = np.random.default_rng(0)
+                names = sorted(strats)
+                cases = []
+                # both bounds of every strategy first (the classic bug homes)
+                width = max(len(strats[k].bounds()) for k in names)
+                for i in range(width):
+                    case = {}
+                    for k in names:
+                        b = strats[k].bounds()
+                        case[k] = b[min(i, len(b) - 1)] if b else strats[k].example(rng)
+                    cases.append(case)
+                while len(cases) < max(n, width):
+                    cases.append({k: strats[k].example(rng) for k in names})
+                for case in cases[: max(n, width)]:
+                    try:
+                        fn(*args, **case, **kwargs)
+                    except Exception:
+                        print(f"falsifying example ({fn.__name__}): {case}")
+                        raise
+
+            # hide the wrapped signature: pytest must not treat the strategy
+            # parameters as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -88,20 +88,20 @@ def test_ulysses_matches_blockwise(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.attention import blockwise_attention, ulysses_attention
 mesh = make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 B, S, H, dh = 2, 32, 8, 16
 q, k, v = (jnp.asarray(rng.standard_normal((B, S, H, dh)), jnp.float32) for _ in range(3))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = blockwise_attention(q, k, v, causal=True, q_block=8)
     got = jax.jit(lambda q, k, v: ulysses_attention(
         q, k, v, mesh, tp_axis="model", causal=True, q_block=8))(q, k, v)
 np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
 # GQA: kv heads fewer than tp -> replicated path
 k2, v2 = k[:, :, :2], v[:, :, :2]
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     want = blockwise_attention(q, k2, v2, causal=True, q_block=8)
     got = jax.jit(lambda q, k, v: ulysses_attention(
         q, k, v, mesh, tp_axis="model", causal=True, q_block=8))(q, k2, v2)

@@ -4,7 +4,7 @@ multi-device compressed psum == exact psum (to quantization tolerance)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.optim.compress import ErrorFeedback, quantize_roundtrip
 
@@ -41,7 +41,7 @@ def test_compressed_psum_matches_exact(subproc):
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, shard_map
 from repro.optim.compress import compressed_psum
 mesh = make_mesh((4,), ("data",))
 rng = np.random.default_rng(0)
@@ -51,7 +51,7 @@ gs = {"a": jnp.asarray(rng.standard_normal((4, 33, 7)), jnp.float32),
 def body(g):
     return compressed_psum(g, mesh, "data")
 
-fn = jax.shard_map(body, mesh=mesh,
+fn = shard_map(body, mesh=mesh,
                    in_specs=({"a": P("data", None, None), "b": P("data", None)},),
                    out_specs={"a": P("data", None, None), "b": P("data", None)},
                    check_vma=False)

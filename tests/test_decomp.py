@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.decomp import (AxisDecomp, decompose, local_lengths,
                                pad_to_multiple, start_indices)

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.config import param_count
 from repro.models.lm import LM
 from repro.models.sharding import Axes
@@ -41,7 +41,7 @@ def test_arch_smoke_train_step(name, mesh):
     cfg = configs.smoke(name)
     lm = LM(cfg, mesh, AXES, q_block=8, xent_chunks=2)
     key = jax.random.PRNGKey(0)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = lm.init_params(key)
         batch = _batch(cfg, key)
         (loss, metrics), grads = jax.jit(jax.value_and_grad(lm.loss, has_aux=True))(
@@ -79,7 +79,7 @@ def test_prefill_decode_matches_forward(name, mesh):
     lm = LM(cfg, mesh, AXES, q_block=4, xent_chunks=1)
     key = jax.random.PRNGKey(1)
     B, S = 2, 8
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = lm.init_params(key)
         toks = jax.random.randint(key, (B, S + 3), 0, cfg.vocab)
         batch_full = dict(_batch(cfg, key, B, S + 3), tokens=toks)
@@ -105,14 +105,14 @@ def test_moe_sharded_lowering(subproc):
     subproc("""
 import jax, jax.numpy as jnp, numpy as np
 from repro import configs
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.lm import LM
 from repro.models.sharding import Axes
 mesh = make_mesh((1, 4), ("data", "model"))
 cfg = configs.smoke("phi35_moe_42b")
 lm = LM(cfg, mesh, Axes(multi_pod=False), q_block=8, xent_chunks=2)
 key = jax.random.PRNGKey(0)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     params = lm.init_params(key)
     B, S = 2, 16
     batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
@@ -134,7 +134,7 @@ def test_prefill_decode_optimized_flags(mesh):
     lm = LM(cfg, mesh, AXES, q_block=4, xent_chunks=1, perf=flags)
     key = jax.random.PRNGKey(1)
     B, S = 2, 8
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = lm.init_params(key)
         toks = jax.random.randint(key, (B, S + 3), 0, cfg.vocab)
         bf = {"tokens": toks, "targets": toks,

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.config import MoEConfig
 from repro.models.moe import moe_apply_a2a, moe_apply_local, moe_init, route
 
@@ -40,7 +40,7 @@ def dense_moe_oracle(p, x, cfg, mlp_kind="swiglu"):
 def test_moe_matches_dense_oracle(path, subproc):
     subproc(f"""
 import jax, jax.numpy as jnp, numpy as np
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.config import MoEConfig
 from repro.models.moe import moe_apply_a2a, moe_apply_local, moe_init
 
@@ -51,7 +51,7 @@ p = moe_init(key, 12, cfg, "swiglu", jnp.float32)
 B, S, D = 2, 8, 12
 x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D), jnp.float32)
 fn = moe_apply_{'a2a' if path == 'a2a' else 'local'}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     y, aux, z = jax.jit(lambda p, x: fn(p, x, mesh, cfg=cfg, mlp_kind="swiglu",
                                         dp_axes=("data",), ep_axis="model"))(p, x)
 assert np.isfinite(float(aux)) and np.isfinite(float(z))
@@ -94,7 +94,7 @@ def test_capacity_dropping():
     cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, capacity_factor=0.1)
     p = moe_init(jax.random.PRNGKey(0), 8, cfg, "swiglu", jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 8), jnp.float32)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y, aux, z = moe_apply_a2a(p, x, mesh, cfg=cfg, mlp_kind="swiglu",
                                   dp_axes=("data",), ep_axis="model")
     assert bool(jnp.all(jnp.isfinite(y)))

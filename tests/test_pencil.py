@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.meshutil import make_mesh
 from repro.core.pencil import Pencil, group_size, make_pencil

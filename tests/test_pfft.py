@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core.pfft import ParallelFFT
 
@@ -47,6 +47,63 @@ np.testing.assert_allclose(np.asarray(plan.forward(jnp.asarray(x))), np.fft.fftn
                            rtol=3e-4, atol=3e-3)
 print("PFFT DECOMPS OK")
 """, ndev=8)
+
+
+def test_pfft_pipelined_and_auto_match_fused(subproc):
+    """method="pipelined" (several chunk counts) and method="auto" produce
+    the same pencils and allclose values as "fused" for slab and pencil
+    decompositions, c2c and r2c — and match the np.fft oracle."""
+    subproc("""
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+mesh = make_mesh((2, 4), ("p0", "p1"))
+rng = np.random.default_rng(0)
+cache = tempfile.mktemp(suffix=".json")
+shape = (16, 12, 20)
+for grid in (("p0",), ("p0", "p1")):
+    for real in (False, True):
+        ref = ParallelFFT(mesh, shape, grid, real=real, method="fused")
+        x = rng.standard_normal(shape).astype(np.float32)
+        if not real:
+            x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+        want = np.asarray(ref.forward(jnp.asarray(x)))
+        variants = [ParallelFFT(mesh, shape, grid, real=real,
+                                method="pipelined", chunks=c) for c in (1, 2, 4)]
+        variants.append(ParallelFFT(mesh, shape, grid, real=real,
+                                    method="auto", tuner_cache=cache))
+        for plan in variants:
+            assert plan.output_pencil == ref.output_pencil   # identical pencils
+            y = np.asarray(plan.forward(jnp.asarray(x)))
+            np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+            oracle = np.fft.rfftn(x) if real else np.fft.fftn(x)
+            np.testing.assert_allclose(y, oracle, rtol=3e-4, atol=3e-3)
+            back = np.asarray(plan.backward(jnp.asarray(y)))
+            np.testing.assert_allclose(back, x, rtol=3e-4, atol=3e-3)
+        print("ok", grid, real)
+print("PFFT PIPELINED/AUTO OK")
+""", ndev=8)
+
+
+def test_model_flops_known_shapes():
+    """Pin the 5 N log2 N accounting: c2c counts every stage at the full
+    logical length; r2c halves the real stage and shrinks the Hermitian
+    axis's contribution to later stages' batches."""
+    from repro.core.meshutil import make_mesh
+
+    mesh = make_mesh((1,), ("p0",))
+    # c2c (8,8,8): 3 stages x 5*8*log2(8) * batch 64
+    assert ParallelFFT(mesh, (8, 8, 8), ("p0",)).model_flops() == 3 * 5 * 8 * 3 * 64
+    # r2c (8,8,8): r2c stage at half, then two c2c stages with the last
+    # axis reduced to 8//2+1 = 5 in their batches
+    want = 0.5 * 5 * 8 * 3 * 64 + 2 * (5 * 8 * 3 * (8 * 5))
+    assert ParallelFFT(mesh, (8, 8, 8), ("p0",), real=True).model_flops() == want
+    # non-power-of-two length uses log2 of the true logical n
+    import math
+    got = ParallelFFT(mesh, (6, 4), ("p0",)).model_flops()
+    assert abs(got - (5 * 6 * math.log2(6) * 4 + 5 * 4 * 2 * 6)) < 1e-9
 
 
 def test_pfft_matmul_impl(subproc):

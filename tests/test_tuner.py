@@ -1,0 +1,78 @@
+"""Exchange-schedule autotuner: candidate sweep, disk cache round-trip."""
+
+import json
+
+from repro.core import tuner
+
+
+def test_tuner_cache_roundtrip(subproc, tmp_path):
+    """Tuning writes the schedule+timings to disk; a fresh plan (fresh
+    process, empty memo) must reload it instead of re-benchmarking."""
+    cache = tmp_path / "tune" / "fft_tuner.json"
+    code = f"""
+import json
+import jax, numpy as np
+from repro.core import tuner
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+cache = {str(cache)!r}
+mesh = make_mesh((2, 2), ("p0", "p1"))
+plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto", tuner_cache=cache)
+sched = plan.schedule
+assert len(sched) == plan.n_exchanges == 2
+for method, chunks in sched:
+    assert method in ("fused", "traditional", "pipelined")
+    assert chunks >= 1
+
+disk = json.loads(open(cache).read())
+key = tuner.plan_key(plan)
+assert key in disk
+assert [tuple(s) for s in disk[key]["schedule"]] == list(sched)
+# every candidate was timed for both exchange stages
+stages = disk[key]["timings"]
+assert len(stages) == 2
+for per in stages.values():
+    timed = {{k: v for k, v in per.items() if ":" not in k}}  # drop error notes
+    assert set(timed) == {{f"{{m}}@{{c}}" for m, c in tuner.DEFAULT_CANDIDATES}}
+    assert all(t > 0 for t in timed.values())
+
+# fresh-memo reload: poison tune_plan; a cache hit must not call it
+tuner._MEMO.clear()
+def boom(*a, **k):
+    raise AssertionError("cache miss: tune_plan re-ran")
+tuner.tune_plan = boom
+plan2 = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto", tuner_cache=cache)
+assert plan2.schedule == sched
+print("TUNER CACHE OK", json.dumps([list(s) for s in sched]))
+"""
+    out = subproc(code, ndev=4)
+    assert "TUNER CACHE OK" in out
+
+
+def test_plan_key_discriminates():
+    """Key must change with anything that changes stage shapes/engines."""
+    from repro.core.meshutil import make_mesh
+    from repro.core.pfft import ParallelFFT
+
+    mesh = make_mesh((1, 1), ("p0", "p1"))
+    base = ParallelFFT(mesh, (8, 8, 8), ("p0",), method="auto")
+    keys = {tuner.plan_key(base)}
+    for plan in (
+        ParallelFFT(mesh, (8, 8, 16), ("p0",), method="auto"),
+        ParallelFFT(mesh, (8, 8, 8), ("p0", "p1"), method="auto"),
+        ParallelFFT(mesh, (8, 8, 8), ("p0",), real=True, method="auto"),
+        ParallelFFT(mesh, (8, 8, 8), ("p0",), impl="matmul", method="auto"),
+    ):
+        keys.add(tuner.plan_key(plan))
+    assert len(keys) == 5
+    # keys are deterministic and json-round-trippable
+    assert tuner.plan_key(base) == tuner.plan_key(base)
+    assert json.loads(tuner.plan_key(base))["shape"] == [8, 8, 8]
+
+
+def test_default_candidates_cover_issue_matrix():
+    assert ("fused", 1) in tuner.DEFAULT_CANDIDATES
+    assert ("traditional", 1) in tuner.DEFAULT_CANDIDATES
+    for c in (2, 4, 8):
+        assert ("pipelined", c) in tuner.DEFAULT_CANDIDATES
