@@ -61,13 +61,22 @@ def lower_fft(shape, mesh_shape, axis_names, grid, *, real, method, impl="jnp"):
         "memory_s": acct["hbm_bytes"] / HBM,
         "collective_s": acct["collectives"].get("total", 0.0) / ICI,
         "model_flops": 2 * plan.model_flops(),  # fwd + bwd
-        "comm_model_bytes_per_dev": 2 * plan.comm_bytes_per_device(4 if real else 8),
+        # exchange payloads are complex64 even for r2c (exchanges run after
+        # the r2c stage), so all modeled comm terms use itemsize 8
+        "comm_model_bytes_per_dev": 2 * plan.comm_bytes_per_device(8),
         # overlap-aware analytic wall time (core/redistribute.exchange_time_model):
         # what the same plan would cost with the pipelined exchange engine
-        "model_time_s": 2 * plan.model_time_s(itemsize=4 if real else 8),
+        "model_time_s": 2 * plan.model_time_s(itemsize=8),
         "model_time_pipelined_s": 2 * ParallelFFT(
             mesh, shape, grid, real=real, method="pipelined",
-            impl=impl).model_time_s(itemsize=4 if real else 8),
+            impl=impl).model_time_s(itemsize=8),
+        # comm-compression lever: same pipelined plan with bf16 wire payloads
+        # (2x fewer ICI bytes, priced against the extra quant HBM passes)
+        "model_time_pipelined_bf16_s": 2 * ParallelFFT(
+            mesh, shape, grid, real=real, method="pipelined", impl=impl,
+            comm_dtype="bf16").model_time_s(itemsize=8),
+        "comm_model_bytes_per_dev_bf16": 2 * plan.comm_bytes_per_device(
+            8, comm_dtype="bf16"),
     }
     dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: rec[k])
     rec["dominant"] = dom.replace("_s", "")

@@ -6,8 +6,10 @@ report the fastest outer iteration divided by inner (their "fastest of 50
 outers of 3").  ``--measure redistribution`` times an exchanges-only plan
 (the paper's "global redistribution" split); fft time = total - redist.
 ``--compare`` times all four exchange engines {fused, traditional,
-pipelined, auto} on the same problem and reports one JSON table (pass
-``--tune-cache`` so the auto schedule round-trips to disk).
+pipelined, auto} × every ``--comm-dtypes`` wire payload {complex64, bf16,
+int8} on the same problem and reports one JSON table with a ``comm_dtype``
+column per row (pass ``--tune-cache`` so the auto schedules round-trip to
+disk).
 
 Run via benchmarks.paperfigs which sets XLA_FLAGS for the device count.
 """
@@ -25,7 +27,7 @@ import numpy as np
 
 
 def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
-               tuner_cache=None):
+               comm_dtype=None, tuner_cache=None):
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ParallelFFT
 
@@ -53,7 +55,8 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
     else:
         raise ValueError(gridspec)
     return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl,
-                       chunks=chunks, tuner_cache=tuner_cache)
+                       chunks=chunks, comm_dtype=comm_dtype,
+                       tuner_cache=tuner_cache)
 
 
 def exchanges_only(plan):
@@ -76,9 +79,10 @@ def exchanges_only(plan):
             # emulate the fft-stage shape change between exchanges
             if block.shape != tuple(np.array(before.local_shape)):
                 block = jnp.zeros(before.local_shape, block.dtype)
-            method, chunks = schedule[ex_i]
+            method, chunks, comm_dtype = schedule[ex_i]
             block = exchange_shard(block, st.v, st.w, st.group,
-                                   method=method, chunks=chunks)
+                                   method=method, chunks=chunks,
+                                   comm_dtype=comm_dtype)
         return block
 
     first = stages[0][1]
@@ -128,8 +132,14 @@ def main(argv=None):
                     help="slice count for method=pipelined")
     ap.add_argument("--tune-cache", type=str, default=None,
                     help="schedule cache path for method=auto")
+    ap.add_argument("--comm-dtype", choices=["complex64", "bf16", "int8"],
+                    default="complex64",
+                    help="exchange wire payload (auto: accuracy budget)")
+    ap.add_argument("--comm-dtypes", type=str, default="complex64,bf16,int8",
+                    help="comma list of payloads the --compare sweep covers")
     ap.add_argument("--compare", action="store_true",
-                    help="time all four methods and report one table")
+                    help="time all four methods x all --comm-dtypes payloads "
+                         "and report one table")
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--impl", default="jnp")
     ap.add_argument("--inner", type=int, default=3)
@@ -143,19 +153,26 @@ def main(argv=None):
         out = {"shape": shape, "grid": args.grid, "real": bool(args.real),
                "ndev": ndev, "methods": {}}
         for method in METHODS:
-            plan = build_plan(shape, args.grid, ndev, real=args.real,
-                              method=method, impl=args.impl, chunks=args.chunks,
-                              tuner_cache=args.tune_cache)
-            out["methods"][method] = {
-                "best_s": _time_plan(plan, shape, args),
-                "schedule": [list(s) for s in plan.schedule],
-                "model_time_s": plan.model_time_s(itemsize=4 if args.real else 8),
-            }
+            for comm_dtype in args.comm_dtypes.split(","):
+                plan = build_plan(shape, args.grid, ndev, real=args.real,
+                                  method=method, impl=args.impl,
+                                  chunks=args.chunks, comm_dtype=comm_dtype,
+                                  tuner_cache=args.tune_cache)
+                out["methods"][f"{method}@{comm_dtype}"] = {
+                    "comm_dtype": comm_dtype,
+                    "best_s": _time_plan(plan, shape, args),
+                    "schedule": [list(s) for s in plan.schedule],
+                    # exchanges carry complex64 payloads even for r2c plans
+                    # (they run after the r2c stage): all comm terms use
+                    # itemsize 8, matching the single-run report
+                    "model_time_s": plan.model_time_s(itemsize=8),
+                    "wire_bytes_per_dev": plan.comm_bytes_per_device(8),
+                }
         print(json.dumps(out))
         return
     plan = build_plan(shape, args.grid, ndev, real=args.real,
                       method=args.method, impl=args.impl, chunks=args.chunks,
-                      tuner_cache=args.tune_cache)
+                      comm_dtype=args.comm_dtype, tuner_cache=args.tune_cache)
 
     rng = np.random.default_rng(0)
     if args.real:
@@ -185,9 +202,10 @@ def main(argv=None):
     best = _best_of(once, xg, outer=args.outer, inner=args.inner)
     print(json.dumps({
         "shape": shape, "grid": args.grid, "method": args.method,
+        "comm_dtype": plan.comm_dtype,
         "real": bool(args.real), "ndev": ndev, "measure": args.measure,
         "best_s": best,
-        "comm_bytes_per_dev": plan.comm_bytes_per_device(8 if not args.real else 8),
+        "comm_bytes_per_dev": plan.comm_bytes_per_device(8),
         "model_flops": plan.model_flops(),
     }))
 

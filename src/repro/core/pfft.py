@@ -36,10 +36,11 @@ from repro.core import fftcore
 from repro.core.meshutil import shard_map
 from repro.core.decomp import pad_to_multiple
 from repro.core.pencil import Group, Pencil, group_size, make_pencil, pad_global, unpad_global
+from repro.core.quant import canonical_comm_dtype
 from repro.core.redistribute import exchange_shard, exchange_shard_sliced
 
-#: (method, chunks) per ExchangeStage, in forward stage order
-Schedule = tuple[tuple[str, int], ...]
+#: (method, chunks, comm_dtype) per ExchangeStage, in forward stage order
+Schedule = tuple[tuple[str, int, str], ...]
 
 # ---------------------------------------------------------------------------
 # Plan construction
@@ -77,6 +78,13 @@ class ParallelFFT:
               "auto" (per-stage micro-benchmarked schedule, cached on disk).
       impl:   local FFT implementation ("jnp" | "matmul").
       chunks: slice count for method="pipelined" (ignored otherwise).
+      comm_dtype: exchange wire payload policy (see
+              :mod:`repro.core.redistribute`): None/"complex64" = lossless
+              (default, bit-identical to the uncompressed plan), "bf16" =
+              2x fewer wire bytes, "int8" = 4x.  For the explicit methods
+              every exchange uses it as given; for method="auto" it is an
+              *accuracy budget* — the tuner sweeps every payload no lossier
+              than this and picks the fastest per stage.
       tuner_cache: path for method="auto"'s schedule cache (default:
               $REPRO_TUNER_CACHE or ~/.cache/repro/fft_tuner.json).
     """
@@ -91,6 +99,7 @@ class ParallelFFT:
         method: str = "fused",
         impl: str = "jnp",
         chunks: int = 4,
+        comm_dtype: str | None = None,
         tuner_cache: str | None = None,
     ):
         d, k = len(shape), len(grid)
@@ -101,6 +110,7 @@ class ParallelFFT:
         self.mesh, self.shape, self.grid = mesh, tuple(shape), tuple(grid)
         self.real, self.method, self.impl = real, method, impl
         self.chunks, self.tuner_cache = chunks, tuner_cache
+        self.comm_dtype = canonical_comm_dtype(comm_dtype)
         self.d, self.k = d, k
 
         sizes = [group_size(mesh, g) for g in grid]
@@ -146,14 +156,16 @@ class ParallelFFT:
 
     @cached_property
     def schedule(self) -> Schedule:
-        """(method, chunks) per exchange stage, forward order.  Uniform for
-        the explicit methods; tuned (and disk-cached) for method="auto"."""
+        """(method, chunks, comm_dtype) per exchange stage, forward order.
+        Uniform for the explicit methods; tuned (and disk-cached) for
+        method="auto", where ``comm_dtype`` is the per-stage payload the
+        tuner picked within the plan's accuracy budget."""
         if self.method == "auto":
             from repro.core import tuner
 
             return tuner.get_or_tune(self, cache_path=self.tuner_cache)
         c = self.chunks if self.method == "pipelined" else 1
-        return ((self.method, c),) * self.n_exchanges
+        return ((self.method, c, self.comm_dtype),) * self.n_exchanges
 
     # -- executors ----------------------------------------------------------
 
@@ -219,18 +231,37 @@ class ParallelFFT:
             flops *= 0.5
         return flops
 
-    def comm_bytes_per_device(self, itemsize: int = 8, *, method: str | None = None) -> int:
-        """Bytes each device sends across all exchanges (roofline term).
-        The wire payload is method-independent; ``method`` adds the
-        materialized local-copy traffic the engine pays on top (traditional:
-        pack+unpack; pipelined: slice concat; fused: none)."""
-        from repro.core.redistribute import exchange_cost_bytes, exchange_local_copy_elems
+    def comm_bytes_per_device(
+        self, itemsize: int = 8, *, method: str | None = None,
+        comm_dtype: str | None = None,
+    ) -> int:
+        """Wire bytes each device sends across all exchanges (roofline
+        term), at the narrowed payload width of each stage's ``comm_dtype``
+        (default: the plan's resolved schedule — per-stage tuned payloads
+        for method="auto", the uniform policy otherwise; pass
+        ``comm_dtype`` to price a hypothetical uniform payload).  The
+        element count is method-independent; ``method`` adds the
+        materialized local-copy traffic the engine pays on top
+        (traditional: pack+unpack; pipelined: slice concat; fused:
+        none)."""
+        from repro.core.redistribute import exchange_local_copy_elems, exchange_wire_bytes
 
-        total = 0
+        if comm_dtype is None:
+            if self.method == "auto" and "schedule" not in self.__dict__:
+                # stay pure arithmetic: a byte count must never trigger the
+                # tuner; price the uniform budget until a schedule exists
+                dtypes = [self.comm_dtype] * self.n_exchanges
+            else:
+                dtypes = [d for _, _, d in self.schedule]
+        else:
+            dtypes = [canonical_comm_dtype(comm_dtype)] * self.n_exchanges
+        total, ex_i = 0, 0
         cur = self.input_pencil
         for st, pen in zip(self.stages, self.pencil_trace[1:]):
             if isinstance(st, ExchangeStage):
-                total += exchange_cost_bytes(cur, st.v, st.w) * itemsize
+                total += exchange_wire_bytes(cur, st.v, st.w, itemsize=itemsize,
+                                             comm_dtype=dtypes[ex_i])
+                ex_i += 1
                 if method is not None:
                     total += exchange_local_copy_elems(cur, st.v, st.w, method=method) * itemsize
             cur = pen
@@ -259,7 +290,7 @@ class ParallelFFT:
         while i < len(stages):
             st = stages[i]
             if isinstance(st, ExchangeStage):
-                method, chunks = schedule[ex_i]
+                method, chunks, comm_dtype = schedule[ex_i]
                 ex_i += 1
                 src_pen = self.pencil_trace[i]  # state before this exchange
                 nxt = stages[i + 1] if i + 1 < len(stages) else None
@@ -269,8 +300,8 @@ class ParallelFFT:
                     i += 1  # folded into the exchange term
                 total += exchange_time_model(
                     src_pen, st.v, st.w, itemsize=itemsize, method=method,
-                    chunks=chunks, ici_bw=ici_bw, hbm_bw=hbm_bw,
-                    overlap_compute_s=fft_s)
+                    chunks=chunks, comm_dtype=comm_dtype, ici_bw=ici_bw,
+                    hbm_bw=hbm_bw, overlap_compute_s=fft_s)
             else:
                 total += self._stage_flops(st) / ndev / peak_flops
             i += 1
@@ -307,28 +338,30 @@ def _reverse_plan(stages, pencils):
 
 def _run_stages(block, *, stages, pencils, schedule, impl, sign):
     """Execute the plan on one shard (inside shard_map).  ``schedule`` gives
-    (method, chunks) per exchange stage, in this plan's stage order; a
-    pipelined exchange followed by the FFT of its newly-aligned axis (always
-    the case in forward and backward plans) is emitted interleaved so XLA
-    can overlap each slice's collective with the previous slice's FFT."""
+    (method, chunks, comm_dtype) per exchange stage, in this plan's stage
+    order; a pipelined exchange followed by the FFT of its newly-aligned
+    axis (always the case in forward and backward plans) is emitted
+    interleaved so XLA can overlap each slice's collective with the
+    previous slice's FFT."""
     cur = pencils[0]
     ex_i = i = 0
     while i < len(stages):
         st = stages[i]
         if isinstance(st, ExchangeStage):
-            method, chunks = schedule[ex_i]
+            method, chunks, comm_dtype = schedule[ex_i]
             ex_i += 1
             nxt_st = stages[i + 1] if i + 1 < len(stages) else None
             if (method == "pipelined" and chunks > 1
                     and isinstance(nxt_st, FFTStage) and nxt_st.axis == st.w):
                 block = _exchange_then_fft(
                     block, st, nxt_st, pencils[i + 1], pencils[i + 2],
-                    chunks=chunks, impl=impl, sign=sign)
+                    chunks=chunks, comm_dtype=comm_dtype, impl=impl, sign=sign)
                 cur = pencils[i + 2]
                 i += 2
                 continue
             block = exchange_shard(block, st.v, st.w, st.group,
-                                   method=method, chunks=chunks)
+                                   method=method, chunks=chunks,
+                                   comm_dtype=comm_dtype)
         else:
             block = _fft_padded_axis(block, st, cur, pencils[i + 1], impl=impl, sign=sign)
         cur = pencils[i + 1]
@@ -337,14 +370,17 @@ def _run_stages(block, *, stages, pencils, schedule, impl, sign):
 
 
 def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
-                       mid: Pencil, after: Pencil, *, chunks, impl, sign):
+                       mid: Pencil, after: Pencil, *, chunks, impl, sign,
+                       comm_dtype=None):
     """Pipelined exchange fused with the next stage's 1-D FFT: issue the
     per-slice all-to-alls interleaved with the per-slice transforms.  Each
     slice is a disjoint v-subrange of the fused output, so slicing commutes
     with the FFT along ``w`` and the concat reproduces the unpipelined
-    result; the payoff is that XLA may run slice i+1's collective DMA under
-    slice i's FFT compute."""
-    pieces = exchange_shard_sliced(block, ex.v, ex.w, ex.group, chunks=chunks)
+    result (bitwise for lossless ``comm_dtype``, to the codec's error bound
+    for bf16/int8 since slices quantize independently); the payoff is that
+    XLA may run slice i+1's collective DMA under slice i's FFT compute."""
+    pieces = exchange_shard_sliced(block, ex.v, ex.w, ex.group, chunks=chunks,
+                                   comm_dtype=comm_dtype)
     out = [_fft_padded_axis(p, fft_st, mid, after, impl=impl, sign=sign)
            for p in pieces]
     return out[0] if len(out) == 1 else jnp.concatenate(out, axis=ex.v)

@@ -1,0 +1,123 @@
+"""Shared quantization core — the repo's single scale/quantize/dequantize
+implementation.
+
+Two consumers:
+
+* :mod:`repro.core.redistribute` — reduced-precision exchange payloads
+  (``comm_dtype``): the v→w all-to-all ships bf16 or int8 re/im planes
+  instead of complex64, cutting wire bytes 2–4× on comm-bound shapes.
+* :mod:`repro.optim.compress` — int8 gradient compression with error
+  feedback for the DP reduction.
+
+Codecs (all symmetric, zero-point-free):
+
+``complex64`` — lossless passthrough (no codec; callers skip encode/decode).
+``bf16``      — plain ``bfloat16`` cast of the f32 re/im planes.  bf16 keeps
+    f32's 8-bit exponent, so no scale is needed or shipped: the codec is a
+    pure rounding of each mantissa to 8 bits (~3 decimal digits).  2× fewer
+    wire bytes.
+``int8``      — per-block max-abs scaling: one f32 scale per index of a
+    caller-chosen *block axis* (max |x| over all other axes, floored, /127),
+    payload ``round(x/scale)`` clipped to [-127, 127].  4× fewer wire bytes
+    plus a tiny f32 scale vector that must ride along (for a collective:
+    a second, scale-sized all-to-all).
+
+Complex arrays are quantized as stacked (re, im) f32 planes —
+:func:`complex_to_planes` / :func:`planes_to_complex` — sharing one scale
+per block across both planes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: accepted comm_dtype policy names, lossless first
+COMM_DTYPES = ("complex64", "bf16", "int8")
+
+_ALIASES = {
+    None: "complex64",
+    "complex64": "complex64",
+    "c64": "complex64",
+    "none": "complex64",
+    "bf16": "bf16",
+    "bfloat16": "bf16",
+    "int8": "int8",
+}
+
+#: scale floor: keeps all-zero blocks (padding) from dividing by zero
+_EPS = 1e-12
+
+
+def canonical_comm_dtype(comm_dtype) -> str:
+    """Normalize a comm_dtype spec (None / alias / dtype-like) to one of
+    :data:`COMM_DTYPES`; raises ``ValueError`` for anything else."""
+    key = comm_dtype if comm_dtype is None else str(comm_dtype).lower()
+    try:
+        return _ALIASES[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm_dtype {comm_dtype!r}; expected one of {COMM_DTYPES}"
+        ) from None
+
+
+def wire_ratio(comm_dtype) -> int:
+    """Payload compression factor vs the uncompressed dtype: wire bytes =
+    itemsize // wire_ratio (int8 scales priced separately)."""
+    return {"complex64": 1, "bf16": 2, "int8": 4}[canonical_comm_dtype(comm_dtype)]
+
+
+# ---------------------------------------------------------------------------
+# int8 codec
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array, *, block_axis: int = 0):
+    """Symmetric per-block int8 quantization of an f32 array.
+
+    One scale per index of ``block_axis`` (max-abs over all other axes):
+    returns ``(q, scale)`` with ``q`` int8 of ``x.shape`` and ``scale`` f32
+    with extent ``x.shape[block_axis]`` on ``block_axis`` and 1 elsewhere
+    (keepdims layout, broadcastable against ``q``).
+    """
+    block_axis = block_axis % x.ndim
+    red = tuple(i for i in range(x.ndim) if i != block_axis)
+    amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_int8` (up to the quantization error):
+    ``scale`` broadcasts against ``q``."""
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# bf16 codec
+# ---------------------------------------------------------------------------
+
+
+def encode_bf16(x: jax.Array) -> jax.Array:
+    """f32 → bf16 (round-to-nearest-even mantissa truncation; no scale)."""
+    return x.astype(jnp.bfloat16)
+
+
+def decode_bf16(p: jax.Array) -> jax.Array:
+    return p.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# complex <-> re/im planes
+# ---------------------------------------------------------------------------
+
+
+def complex_to_planes(y: jax.Array) -> jax.Array:
+    """complex64 array → stacked ``(2, *y.shape)`` f32 (re, im) planes."""
+    return jnp.stack([jnp.real(y), jnp.imag(y)]).astype(jnp.float32)
+
+
+def planes_to_complex(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`complex_to_planes`."""
+    return jax.lax.complex(p[0].astype(jnp.float32), p[1].astype(jnp.float32))

@@ -30,11 +30,36 @@ Three implementations of the v→w exchange of a distributed array:
     (cf. partitioned/persistent-collective MPI FFTs, arXiv:2306.16589).
 
 ``method="auto"`` (plan level only, see :mod:`repro.core.tuner`) —
-    micro-benchmarks {fused, traditional, pipelined×chunks} per exchange
-    stage of a plan and caches the winning schedule on disk.
+    micro-benchmarks {fused, traditional, pipelined×chunks} × the allowed
+    ``comm_dtype`` payloads per exchange stage of a plan and caches the
+    winning schedule on disk.
 
 Both operate *per shard* (inside ``shard_map``) via ``exchange_shard`` and
 at the jit level on globally-sharded arrays via ``exchange``.
+
+Communication compression (``comm_dtype``)
+------------------------------------------
+
+Every engine accepts a ``comm_dtype`` payload policy (codecs in
+:mod:`repro.core.quant`); the wire pattern is encode → all-to-all the
+narrow payload (+ one tiny f32 scale all-to-all for int8) → decode:
+
+``"complex64"`` (default / ``None``) — lossless passthrough.  Bit-identical
+    to the uncompressed exchange for all three engines: the collective sees
+    the original complex64 buffer.
+``"bf16"`` — the complex block travels as stacked (re, im) bf16 planes:
+    2× fewer wire bytes.  bf16 keeps f32's exponent so no scale is shipped;
+    accuracy contract: each exchanged value is rounded to 8 mantissa bits
+    (~3 decimal digits), and a full FFT round trip stays within ~1e-3
+    relative L2 of the exact result.
+``"int8"`` — per-destination-chunk max-abs int8 planes: 4× fewer wire
+    bytes plus one f32 scale per destination rank (a second, scale-sized
+    all-to-all).  Accuracy contract: per-element error ≤ chunk-max/254 per
+    exchange; a full round trip stays within ~1e-2 relative L2.  Expected
+    to win only when the exchange is firmly ICI-bound — the codec pays two
+    extra HBM passes over the block (quantize + dequantize), so on small /
+    compute-bound shapes complex64 or bf16 wins; the tuner prices exactly
+    this trade when ``method="auto"`` is given an accuracy budget.
 """
 
 from __future__ import annotations
@@ -47,14 +72,71 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh
 
+from repro.core import quant
 from repro.core.decomp import local_lengths
 from repro.core.meshutil import axis_size as _mesh_axis_size, shard_map
 from repro.core.pencil import Group, Pencil, group_names, group_size
+from repro.core.quant import canonical_comm_dtype, wire_ratio
 
 Method = str  # "fused" | "traditional" | "pipelined"
+CommDtype = str  # "complex64" | "bf16" | "int8" (None accepted as complex64)
 
 #: chunk counts the tuner sweeps for the pipelined method
 PIPELINE_CHUNK_CANDIDATES = (2, 4, 8)
+
+
+def _all_to_all_comm(
+    y: jax.Array,
+    axis_name,
+    *,
+    split_axis: int,
+    concat_axis: int,
+    comm_dtype: CommDtype | None = None,
+) -> jax.Array:
+    """``lax.all_to_all(..., tiled=True)`` with an optional reduced-precision
+    wire payload (the comm-compression core all three engines share).
+
+    ``complex64``: the collective runs on ``y`` directly — bit-identical to
+    an uncompressed exchange.  ``bf16``/``int8``: ``y`` is encoded to
+    stacked (re, im) planes (a plain f32 plane for real input), the narrow
+    payload is exchanged with the split/concat axes shifted past the plane
+    axis, and the result is decoded back to ``y``'s dtype.  For int8 the
+    per-destination-chunk scales ride in a second, scale-sized all-to-all
+    so each receiver dequantizes chunk ``j`` with sender ``j``'s scale.
+    """
+    d = canonical_comm_dtype(comm_dtype)
+    if d == "complex64":
+        return lax.all_to_all(y, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+    iscomplex = jnp.iscomplexobj(y)
+    planes = quant.complex_to_planes(y) if iscomplex else y[None].astype(jnp.float32)
+    sa, ca = split_axis + 1, concat_axis + 1
+
+    if d == "bf16":
+        p = lax.all_to_all(quant.encode_bf16(planes), axis_name,
+                           split_axis=sa, concat_axis=ca, tiled=True)
+        p = quant.decode_bf16(p)
+        return quant.planes_to_complex(p) if iscomplex else p[0]
+
+    # int8: one scale per destination chunk of the split axis.
+    m = _axis_size(axis_name)
+    nv = planes.shape[sa]
+    if nv % m != 0:
+        raise ValueError(f"split axis extent {nv} not divisible by group size {m}")
+    view = list(planes.shape)
+    view[sa : sa + 1] = [m, nv // m]
+    q, scale = quant.quantize_int8(planes.reshape(view), block_axis=sa)
+    q = q.reshape(planes.shape)
+    s = scale.reshape([m if i == sa else 1 for i in range(planes.ndim)])
+    qx = lax.all_to_all(q, axis_name, split_axis=sa, concat_axis=ca, tiled=True)
+    sx = lax.all_to_all(s, axis_name, split_axis=sa, concat_axis=ca, tiled=True)
+    # received chunk j along the concat axis was quantized with sender j's
+    # scale: view ca as (m, ca_out/m) and broadcast sx over the chunk
+    out_view = list(qx.shape)
+    out_view[ca : ca + 1] = [m, qx.shape[ca] // m]
+    dq = quant.dequantize_int8(qx.reshape(out_view), jnp.expand_dims(sx, ca + 1))
+    p = dq.reshape(qx.shape)
+    return quant.planes_to_complex(p) if iscomplex else p[0]
 
 
 def exchange_shard(
@@ -66,6 +148,7 @@ def exchange_shard(
     method: Method = "fused",
     chunks: int = 1,
     transposed_out: bool = False,
+    comm_dtype: CommDtype | None = None,
 ) -> jax.Array:
     """Per-shard v→w exchange over mesh subgroup ``group``.
 
@@ -74,7 +157,9 @@ def exchange_shard(
     ``w`` full.  Mirrors the paper's EXCHANGE(P, A, v, B, w) (Alg. 3).
 
     ``chunks`` only affects ``method="pipelined"``; ``transposed_out`` only
-    affects ``method="traditional"``.
+    affects ``method="traditional"``.  ``comm_dtype`` selects the wire
+    payload encoding (see module docstring): ``None``/``"complex64"`` is
+    lossless and bit-identical to the uncompressed exchange.
     """
     if v == w:
         raise ValueError("exchange requires v != w (paper Alg. 3)")
@@ -84,10 +169,12 @@ def exchange_shard(
     if method == "fused":
         # The paper's method: one generalized all-to-all; the split/concat
         # axes are the "subarray datatype" description.
-        return lax.all_to_all(block, axis_name, split_axis=v, concat_axis=w, tiled=True)
+        return _all_to_all_comm(block, axis_name, split_axis=v, concat_axis=w,
+                                comm_dtype=comm_dtype)
 
     if method == "pipelined":
-        pieces = exchange_shard_sliced(block, v, w, group, chunks=chunks)
+        pieces = exchange_shard_sliced(block, v, w, group, chunks=chunks,
+                                       comm_dtype=comm_dtype)
         return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=v)
 
     if method == "traditional":
@@ -103,7 +190,8 @@ def exchange_shard(
         # local transpose (the costly pack step traditional codes pay for).
         y = jnp.moveaxis(y, v, 0)
         # Eq. (17)+ALLTOALL: contiguous exchange on the leading chunk axis.
-        y = lax.all_to_all(y, axis_name, split_axis=0, concat_axis=0, tiled=True)
+        y = _all_to_all_comm(y, axis_name, split_axis=0, concat_axis=0,
+                             comm_dtype=comm_dtype)
         # Unpack: leading chunk q now carries peer q's w-shard (global w order).
         if transposed_out:
             # FFTW "transposed out": keep chunk-major layout, caller handles it.
@@ -125,6 +213,7 @@ def exchange_shard_sliced(
     group: Group,
     *,
     chunks: int,
+    comm_dtype: CommDtype | None = None,
 ) -> list[jax.Array]:
     """The fused v→w exchange as ``chunks`` independent per-slice
     all-to-alls (the ``pipelined`` engine).
@@ -134,9 +223,12 @@ def exchange_shard_sliced(
     Slice ``i``'s all-to-all splits the ``m`` factor across ranks and
     concatenates along ``w``, so rank ``r``'s slice ``i`` output is exactly
     rows ``[r*b + off_i, r*b + off_i + len_i)`` of the fused output:
-    concatenating the slices along ``v`` reproduces ``fused`` bit for bit,
-    while each slice remains a standalone collective XLA may overlap with
-    unrelated compute.
+    concatenating the slices along ``v`` reproduces ``fused`` bit for bit
+    for lossless payloads (``comm_dtype=None``/``"complex64"``), while each
+    slice remains a standalone collective XLA may overlap with unrelated
+    compute.  (Under a lossy ``comm_dtype`` the slices quantize
+    independently — different max-abs blocks than the fused engine — so the
+    results agree only to the codec's error bound, not bitwise.)
     """
     names = group_names(group)
     axis_name = names[0] if len(names) == 1 else names
@@ -156,7 +248,8 @@ def exchange_shard_sliced(
     for n in sizes:
         piece = lax.slice_in_dim(y, off, off + n, axis=v + 1)
         off += n
-        p = lax.all_to_all(piece, axis_name, split_axis=v, concat_axis=w_eff, tiled=True)
+        p = _all_to_all_comm(piece, axis_name, split_axis=v, concat_axis=w_eff,
+                             comm_dtype=comm_dtype)
         # p's m-factor axis now has extent 1: merge (1, n) -> (n,)
         pshape = list(p.shape)
         pshape[v : v + 2] = [n]
@@ -176,6 +269,7 @@ def exchange(
     *,
     method: Method = "fused",
     chunks: int = 1,
+    comm_dtype: CommDtype | None = None,
 ) -> tuple[jax.Array, Pencil]:
     """Jit-level v→w exchange of a globally-sharded array.
 
@@ -192,7 +286,8 @@ def exchange(
         raise ValueError(f"input axis w={w} must be distributed; placement={src.placement}")
     dst = src.exchanged(v, w)
     fn = shard_map(
-        partial(exchange_shard, v=v, w=w, group=group, method=method, chunks=chunks),
+        partial(exchange_shard, v=v, w=w, group=group, method=method,
+                chunks=chunks, comm_dtype=comm_dtype),
         mesh=src.mesh,
         in_specs=src.spec,
         out_specs=dst.spec,
@@ -209,11 +304,27 @@ def exchange(
 def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
     """Elements each rank sends in the exchange (itemsize excluded): the
     full local block minus the chunk it keeps.  Identical for all methods —
-    the wire payload is a property of the redistribution, not the engine.
-    Used by the roofline model."""
+    the element count is a property of the redistribution, not the engine.
+    Used by the roofline model; see :func:`exchange_wire_bytes` for the
+    actual wire bytes under a ``comm_dtype`` payload policy."""
     m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
     local = int(np.prod(src.local_shape, dtype=np.int64))
     return local * (m - 1) // m
+
+
+def exchange_wire_bytes(
+    src: Pencil, v: int, w: int, *, itemsize: int = 8,
+    comm_dtype: CommDtype | None = None,
+) -> int:
+    """Bytes each rank actually puts on the wire: the exchanged elements at
+    the narrowed payload width (bf16 planes: itemsize/2; int8 planes:
+    itemsize/4 plus one f32 scale per peer destination)."""
+    d = canonical_comm_dtype(comm_dtype)
+    total = exchange_cost_bytes(src, v, w) * itemsize // wire_ratio(d)
+    if d == "int8":
+        m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
+        total += 4 * (m - 1)  # per-destination f32 scales (kept chunk excluded)
+    return total
 
 
 def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "fused") -> int:
@@ -233,6 +344,7 @@ def exchange_time_model(
     itemsize: int = 8,
     method: Method = "fused",
     chunks: int = 1,
+    comm_dtype: CommDtype | None = None,
     ici_bw: float = 50e9,
     hbm_bw: float = 819e9,
     overlap_compute_s: float = 0.0,
@@ -245,9 +357,18 @@ def exchange_time_model(
     compute, overlapping the rest:
 
         T = T_comm/c + max(T_comm, T_fft)·(c-1)/c + T_fft/c
+
+    A narrowed ``comm_dtype`` shrinks T_comm to the wire bytes of
+    :func:`exchange_wire_bytes` but adds two HBM passes over the local
+    block (quantize before / dequantize after the collective).
     """
-    comm_s = exchange_cost_bytes(src, v, w) * itemsize / ici_bw
+    d = canonical_comm_dtype(comm_dtype)
+    comm_s = exchange_wire_bytes(src, v, w, itemsize=itemsize, comm_dtype=d) / ici_bw
     copy_s = exchange_local_copy_elems(src, v, w, method=method) * itemsize / hbm_bw
+    if d != "complex64":
+        # encode: read wide + write narrow; decode: read narrow + write wide
+        local = int(np.prod(src.local_shape, dtype=np.int64))
+        copy_s += 2 * local * (itemsize + itemsize // wire_ratio(d)) / hbm_bw
     if method == "pipelined" and chunks > 1:
         c = chunks
         pipe = comm_s / c + max(comm_s, overlap_compute_s) * (c - 1) / c + overlap_compute_s / c

@@ -3,13 +3,31 @@
 The paper's single-collective formulation leaves the *engine* of each
 exchange open — the MPI analogue is the library's freedom to implement
 ``MPI_ALLTOALLW`` however it likes, and FLUPS (arXiv:2211.07777) shows the
-winning strategy is shape/topology dependent.  Here the candidate engines
-per exchange stage are ``fused``, ``traditional`` and
-``pipelined×chunks∈{2,4,8}`` (comm/compute overlap, arXiv:2306.16589
-lineage); this module micro-benchmarks each candidate on the stage's real
-shapes (the exchange plus the 1-D FFT it feeds, so overlap is priced in)
-and caches the winning schedule on disk keyed by
-(mesh shape, global shape, grid, dtype, real, impl).
+winning strategy is shape/topology dependent.  Here the candidate space per
+exchange stage is the cross product of
+
+* engine: ``fused``, ``traditional``, ``pipelined×chunks∈{2,4,8}``
+  (comm/compute overlap, arXiv:2306.16589 lineage), and
+* wire payload (``comm_dtype``): every payload no lossier than the plan's
+  accuracy budget (see :mod:`repro.core.redistribute`) — ``complex64``
+  only for the default lossless budget, ``{complex64, bf16}`` for
+  ``comm_dtype="bf16"``, ``{complex64, bf16, int8}`` for ``"int8"``.
+  int8 is expected to win only on firmly ICI-bound stages: the narrowed
+  payload must buy back the codec's two extra HBM passes over the block.
+
+This module micro-benchmarks each candidate on the stage's real shapes (the
+exchange plus the 1-D FFT it feeds, so overlap is priced in) and caches the
+winning schedule on disk.
+
+Cache schema v2: each entry maps a :func:`plan_key` — mesh shape, global
+shape, grid, dtype, real, impl, backend *and device kind* (so timings from
+different TPU generations under the same ``backend`` string never collide),
+the candidate set, and ``schema: 2`` — to ``{"schedule": [[method, chunks,
+comm_dtype], ...], "timings": {...}}``.  v1 entries (2-field schedules, no
+schema tag) have incompatible keys and are simply never matched; stale
+entries are harmless.  Writes are atomic (temp file + ``os.replace``) so
+concurrent benchmark workers sharing a cache cannot interleave partial
+JSON.
 
 Cache location: ``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/fft_tuner.json``;
 an in-process memo avoids re-reading the file per plan.
@@ -19,6 +37,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import time
 from pathlib import Path
 
@@ -26,16 +45,43 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.meshutil import shard_map
+from repro.core.quant import canonical_comm_dtype
 from repro.core.redistribute import PIPELINE_CHUNK_CANDIDATES, exchange_shard
 
-#: (method, chunks) candidates benchmarked per exchange stage
-DEFAULT_CANDIDATES: tuple[tuple[str, int], ...] = (
+#: cache schema version (bump when the key or entry layout changes)
+SCHEMA_VERSION = 2
+
+#: (method, chunks) engine candidates benchmarked per exchange stage
+ENGINE_CANDIDATES: tuple[tuple[str, int], ...] = (
     ("fused", 1),
     ("traditional", 1),
     *(("pipelined", c) for c in PIPELINE_CHUNK_CANDIDATES),
 )
 
-_MEMO: dict[str, tuple[tuple[str, int], ...]] = {}
+#: payloads allowed under each accuracy budget, lossless first
+COMM_DTYPE_LADDER = {
+    "complex64": ("complex64",),
+    "bf16": ("complex64", "bf16"),
+    "int8": ("complex64", "bf16", "int8"),
+}
+
+
+def candidates_for(comm_dtype=None) -> tuple[tuple[str, int, str], ...]:
+    """Full (method, chunks, comm_dtype) candidate set for an accuracy
+    budget: every engine × every payload no lossier than ``comm_dtype``."""
+    ladder = COMM_DTYPE_LADDER[canonical_comm_dtype(comm_dtype)]
+    return tuple((m, c, d) for d in ladder for m, c in ENGINE_CANDIDATES)
+
+
+#: default candidate set (lossless budget)
+DEFAULT_CANDIDATES = candidates_for("complex64")
+
+_MEMO: dict[str, tuple[tuple[str, int, str], ...]] = {}
+
+#: per-candidate stage timings memo shared across accuracy budgets in one
+#: process: a --compare sweep tuning the same plan under complex64, bf16
+#: and int8 budgets re-times only the candidates it has not seen yet
+_STAGE_MEMO: dict[tuple[str, int, str], float] = {}
 
 
 def default_cache_path() -> Path:
@@ -45,17 +91,29 @@ def default_cache_path() -> Path:
     return Path.home() / ".cache" / "repro" / "fft_tuner.json"
 
 
-def plan_key(plan, candidates=DEFAULT_CANDIDATES) -> str:
-    """Cache key: everything that determines the stage shapes, the engines
-    swept, and the hardware the timings are valid for."""
+def _key_fields(plan) -> dict:
+    """Everything that determines the stage shapes and the hardware the
+    timings are valid for (the candidate-set-independent part of the key)."""
     mesh_sig = tuple(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
     dtype = "float32->complex64" if plan.real else "complex64"
-    return json.dumps(
-        {"mesh": mesh_sig, "shape": plan.shape, "grid": plan.grid,
-         "dtype": dtype, "real": plan.real, "impl": plan.impl,
-         "backend": jax.default_backend(),
-         "candidates": sorted(f"{m}@{c}" for m, c in candidates)},
-        sort_keys=True, default=str)
+    try:
+        device_kind = jax.devices()[0].device_kind
+    except Exception:  # no devices (analysis-only contexts)
+        device_kind = "unknown"
+    return {"schema": SCHEMA_VERSION, "mesh": mesh_sig, "shape": plan.shape,
+            "grid": plan.grid, "dtype": dtype, "real": plan.real,
+            "impl": plan.impl, "backend": jax.default_backend(),
+            "device_kind": device_kind}
+
+
+def plan_key(plan, candidates=None) -> str:
+    """Cache key: everything that determines the stage shapes, the engines
+    and payloads swept, and the hardware the timings are valid for."""
+    if candidates is None:
+        candidates = candidates_for(getattr(plan, "comm_dtype", None))
+    fields = _key_fields(plan)
+    fields["candidates"] = sorted(f"{m}@{c}@{d}" for m, c, d in candidates)
+    return json.dumps(fields, sort_keys=True, default=str)
 
 
 def load_cache(path: Path) -> dict:
@@ -66,19 +124,33 @@ def load_cache(path: Path) -> dict:
 
 
 def save_cache(path: Path, data: dict) -> bool:
+    """Atomically replace the cache file: write a temp file in the same
+    directory, then ``os.replace`` — concurrent benchmark workers can race
+    on last-writer-wins but can never interleave partial JSON."""
     try:
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(json.dumps(data, indent=1))
+        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(data, indent=1))
+            os.replace(tmp, path)
+        except BaseException:
+            os.unlink(tmp)
+            raise
         return True
     except OSError:
         return False  # read-only FS etc.: tuning still works, just uncached
 
 
 def get_or_tune(plan, *, cache_path: str | None = None,
-                candidates=DEFAULT_CANDIDATES) -> tuple[tuple[str, int], ...]:
-    """Return the tuned (method, chunks) per exchange stage for ``plan``,
-    consulting the in-process memo, then the disk cache, then benchmarking."""
+                candidates=None) -> tuple[tuple[str, int, str], ...]:
+    """Return the tuned (method, chunks, comm_dtype) per exchange stage for
+    ``plan``, consulting the in-process memo, then the disk cache, then
+    benchmarking.  The default candidate set is every engine × every
+    payload within the plan's ``comm_dtype`` accuracy budget."""
+    if candidates is None:
+        candidates = candidates_for(getattr(plan, "comm_dtype", None))
     path = Path(cache_path) if cache_path else default_cache_path()
     key = plan_key(plan, candidates)
     memo_key = f"{path}|{key}"
@@ -86,7 +158,7 @@ def get_or_tune(plan, *, cache_path: str | None = None,
         return _MEMO[memo_key]
     disk = load_cache(path)
     if key in disk:
-        sched = tuple((str(m), int(c)) for m, c in disk[key]["schedule"])
+        sched = tuple((str(m), int(c), str(d)) for m, c, d in disk[key]["schedule"])
     else:
         sched, timings = tune_plan(plan, candidates=candidates)
         disk[key] = {"schedule": [list(s) for s in sched], "timings": timings}
@@ -95,37 +167,47 @@ def get_or_tune(plan, *, cache_path: str | None = None,
     return sched
 
 
-def tune_plan(plan, *, candidates=DEFAULT_CANDIDATES, repeats: int = 3,
-              inner: int = 2):
-    """Micro-benchmark every candidate engine for every exchange stage of
-    ``plan`` (each stage timed together with the 1-D FFT it feeds, so a
-    pipelined candidate gets credit for overlap) and return
-    (schedule, timings) with ``timings[stage][method@chunks] = seconds``."""
+def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2):
+    """Micro-benchmark every candidate (engine, chunks, comm_dtype) for
+    every exchange stage of ``plan`` (each stage timed together with the
+    1-D FFT it feeds, so a pipelined candidate gets credit for overlap) and
+    return (schedule, timings) with
+    ``timings[stage][method@chunks@comm_dtype] = seconds``."""
     from repro.core.pfft import ExchangeStage
 
-    schedule: list[tuple[str, int]] = []
+    if candidates is None:
+        candidates = candidates_for(getattr(plan, "comm_dtype", None))
+    base_key = json.dumps(_key_fields(plan), sort_keys=True, default=str)
+    schedule: list[tuple[str, int, str]] = []
     timings: dict[str, dict[str, float]] = {}
     for si, st in enumerate(plan.stages):
         if not isinstance(st, ExchangeStage):
             continue
         per = {}
-        for method, chunks in candidates:
+        for method, chunks, comm_dtype in candidates:
+            tag = f"{method}@{chunks}@{comm_dtype}"
+            memo_key = (base_key, si, tag)
+            if memo_key in _STAGE_MEMO:
+                per[tag] = _STAGE_MEMO[memo_key]
+                continue
             try:
-                per[f"{method}@{chunks}"] = _time_stage(
-                    plan, si, method, chunks, repeats=repeats, inner=inner)
+                per[tag] = _time_stage(plan, si, method, chunks, comm_dtype,
+                                       repeats=repeats, inner=inner)
+                _STAGE_MEMO[memo_key] = per[tag]
             except Exception as e:  # candidate invalid for this shape
-                per[f"{method}@{chunks}"] = float("inf")
-                per[f"{method}@{chunks}:error"] = repr(e)[:200]
+                per[tag] = float("inf")
+                per[f"{tag}:error"] = repr(e)[:200]
         best = min((k for k in per if ":" not in k), key=lambda k: per[k])
-        method, chunks = best.split("@")
-        schedule.append((method, int(chunks)))
+        method, chunks, comm_dtype = best.split("@")
+        schedule.append((method, int(chunks), comm_dtype))
         timings[f"stage{si}"] = per  # errors kept: an inf needs its reason
     return tuple(schedule), timings
 
 
-def _time_stage(plan, si: int, method: str, chunks: int, *, repeats: int,
-                inner: int) -> float:
-    """Wall-time one exchange stage (+ its following FFT) under one engine."""
+def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str, *,
+                repeats: int, inner: int) -> float:
+    """Wall-time one exchange stage (+ its following FFT) under one engine
+    and payload."""
     from repro.core import fftcore
     from repro.core.pfft import FFTStage, _exchange_then_fft, _fft_padded_axis
 
@@ -139,9 +221,10 @@ def _time_stage(plan, si: int, method: str, chunks: int, *, repeats: int,
         if has_fft and method == "pipelined" and chunks > 1:
             return _exchange_then_fft(
                 block, st, follow, plan.pencil_trace[si + 1], out_pen,
-                chunks=chunks, impl=plan.impl, sign=fftcore.FORWARD)
+                chunks=chunks, comm_dtype=comm_dtype, impl=plan.impl,
+                sign=fftcore.FORWARD)
         block = exchange_shard(block, st.v, st.w, st.group,
-                               method=method, chunks=chunks)
+                               method=method, chunks=chunks, comm_dtype=comm_dtype)
         if has_fft:
             block = _fft_padded_axis(block, follow, plan.pencil_trace[si + 1],
                                      out_pen, impl=plan.impl, sign=fftcore.FORWARD)

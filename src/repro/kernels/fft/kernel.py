@@ -43,7 +43,10 @@ def fourstep_kernel(
     xr_ref, xi_ref, f1r_ref, f1i_ref, f2r_ref, f2i_ref, twr_ref, twi_ref,
     or_ref, oi_ref, *, karatsuba: bool, real_input: bool,
 ):
-    """One (block_b, n1, n2) tile: out[b, k2, k1] = DFT(x[b, n1, n2])."""
+    """One (block_b, n1, n2) tile: out[b, k2, k1] = DFT(x[b, n1, n2]).
+
+    ``xi_ref`` is ``None`` on the real-input (rfft) path — the operand is
+    dropped from the pallas_call so no zero plane ever reaches VMEM."""
     ar = xr_ref[...]  # (bb, n1, n2)
     ai = None if real_input else xi_ref[...]
     f1r, f1i = f1r_ref[...], f1i_ref[...]  # (n1, n1)
@@ -85,18 +88,29 @@ def fourstep_pallas_call(
     batch: int, n1: int, n2: int, *, block_b: int, karatsuba: bool,
     real_input: bool, interpret: bool,
 ):
-    """Build the pallas_call for a (batch, n1, n2) -> (batch, n2, n1) DFT."""
+    """Build the pallas_call for a (batch, n1, n2) -> (batch, n2, n1) DFT.
+
+    ``real_input=True`` takes a single ``xr`` input operand (rfft path:
+    there is no imaginary plane to ship)."""
     assert batch % block_b == 0, (batch, block_b)
     grid = (batch // block_b,)
     tile_in = pl.BlockSpec((block_b, n1, n2), lambda i: (i, 0, 0))
     tile_out = pl.BlockSpec((block_b, n2, n1), lambda i: (i, 0, 0))
     full = lambda a, b: pl.BlockSpec((a, b), lambda i: (0, 0))
-    kern = functools.partial(fourstep_kernel, karatsuba=karatsuba, real_input=real_input)
+    if real_input:
+        def kern(xr_ref, *refs):
+            fourstep_kernel(xr_ref, None, *refs,
+                            karatsuba=karatsuba, real_input=True)
+        x_specs = [tile_in]                 # xr only
+    else:
+        kern = functools.partial(fourstep_kernel, karatsuba=karatsuba,
+                                 real_input=real_input)
+        x_specs = [tile_in, tile_in]        # xr, xi
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            tile_in, tile_in,               # xr, xi
+            *x_specs,
             full(n1, n1), full(n1, n1),     # F1 re/im
             full(n2, n2), full(n2, n2),     # F2 re/im
             full(n1, n2), full(n1, n2),     # twiddle re/im

@@ -65,7 +65,7 @@ def fft_matmul(
         _to_last(xr, axis), _to_last(xi, axis), n,
         karatsuba=karatsuba, block_b=block_b, interpret=interpret, real_input=False,
     )
-    return _from_last(jax.lax.complex(yr, yi), axis, x.ndim)
+    return _from_last(jax.lax.complex(yr, yi), axis)
 
 
 @functools.partial(jax.jit, static_argnames=("axis", "karatsuba", "block_b", "interpret"))
@@ -82,7 +82,7 @@ def rfft_matmul(
         karatsuba=karatsuba, block_b=block_b, interpret=interpret, real_input=True,
     )
     y = jax.lax.complex(yr, yi)[..., : n // 2 + 1]
-    return _from_last(y, axis, x.ndim, resized=True)
+    return _from_last(y, axis)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "axis", "karatsuba", "block_b", "interpret"))
@@ -99,7 +99,7 @@ def irfft_matmul(
     full = jnp.concatenate([xl, tail], axis=-1)
     y = fft_matmul(full, axis=-1, inverse=True, karatsuba=karatsuba,
                    block_b=block_b, interpret=interpret)
-    return _from_last(jnp.real(y), axis, x.ndim, resized=True)
+    return _from_last(jnp.real(y), axis)
 
 
 # ---------------------------------------------------------------------------
@@ -109,7 +109,7 @@ def _to_last(x, axis):
     return jnp.moveaxis(x, axis, -1)
 
 
-def _from_last(y, axis, ndim, resized: bool = False):
+def _from_last(y, axis):
     return jnp.moveaxis(y, -1, axis)
 
 
@@ -130,7 +130,9 @@ def _fourstep_lastaxis_real(xr, xi, n, *, karatsuba, block_b, interpret, real_in
         return a
 
     xr2 = prep(xr)
-    xi2 = prep(xi) if xi is not None else jnp.zeros_like(xr2)  # ignored when real_input
+    # real_input path (xi is None): no imaginary plane is materialized or
+    # fed to the kernel at all — the pallas_call drops the operand.
+    planes = (xr2,) if xi is None else (xr2, prep(xi))
 
     f1 = ref.dft_matrix(n1)
     f2 = ref.dft_matrix(n2)
@@ -141,7 +143,7 @@ def _fourstep_lastaxis_real(xr, xi, n, *, karatsuba, block_b, interpret, real_in
 
     call = fourstep_pallas_call(b_pad, n1, n2, block_b=bb, karatsuba=karatsuba,
                                 real_input=real_input, interpret=interpret)
-    yr, yi = call(xr2, xi2, *consts)
+    yr, yi = call(*planes, *consts)
     # output tile layout (b, k2=n2, k1=n1) flattens row-major to k = k1 + n1*k2
     yr = yr.reshape(b_pad, n)[:b].reshape(*batch_shape, n)
     yi = yi.reshape(b_pad, n)[:b].reshape(*batch_shape, n)

@@ -16,7 +16,9 @@ SGD lineage; standard convergence-safe form).
 
 This composes with the paper's doctrine: the reduction is expressed as the
 same fused all-to-all primitive as the FFT exchange — one more user of
-``lax.all_to_all`` over a mesh subgroup.
+``lax.all_to_all`` over a mesh subgroup — and the quantizer is the repo's
+single shared implementation in :mod:`repro.core.quant` (also the
+``comm_dtype`` exchange-payload codec of :mod:`repro.core.redistribute`).
 """
 
 from __future__ import annotations
@@ -29,18 +31,12 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core.meshutil import axis_size as _axis_size
+from repro.core.quant import dequantize_int8 as _dequant, quantize_int8
 
 
-def _quant(x, axis=-1):
-    """Symmetric per-row int8 quantization; returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
-
-
-def _dequant(q, scale):
-    return q.astype(jnp.float32) * scale
+def _quant(x):
+    """Symmetric per-chunk int8 (chunks along axis 0); returns (q, scale)."""
+    return quantize_int8(x, block_axis=0)
 
 
 def _reduce_shard(flat, axis_name: str):

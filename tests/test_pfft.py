@@ -87,6 +87,84 @@ print("PFFT PIPELINED/AUTO OK")
 """, ndev=8)
 
 
+def test_pfft_comm_dtype_accuracy(subproc):
+    """Compressed-exchange accuracy contract at the plan level, slab and
+    pencil grids: comm_dtype=None/"complex64" is bit-identical to today's
+    output for all three engines; "bf16" round-trips backward(forward(x))
+    to < 1e-2 relative L2; "int8" to < 5e-2."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+mesh = make_mesh((2, 4), ("p0", "p1"))
+rng = np.random.default_rng(0)
+shape = (16, 12, 20)
+x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+for grid in (("p0",), ("p0", "p1")):
+    ref = ParallelFFT(mesh, shape, grid)
+    want = np.asarray(ref.forward(jnp.asarray(x)))
+    for method in ("fused", "traditional", "pipelined"):
+        for comm_dtype in (None, "complex64", "bf16", "int8"):
+            plan = ParallelFFT(mesh, shape, grid, method=method, chunks=2,
+                               comm_dtype=comm_dtype)
+            y = plan.forward(jnp.asarray(x))
+            back = np.asarray(plan.backward(y))
+            if comm_dtype in (None, "complex64"):
+                # lossless payload: bit-identical forward transform
+                assert np.array_equal(np.asarray(y), want), (grid, method)
+            rel = np.linalg.norm(back - x) / np.linalg.norm(x)
+            bound = {None: 1e-5, "complex64": 1e-5, "bf16": 1e-2, "int8": 5e-2}[comm_dtype]
+            assert rel < bound, (grid, method, comm_dtype, rel)
+    print("ok", grid)
+print("PFFT COMM DTYPE OK")
+""", ndev=8)
+
+
+def test_backward_consumes_reversed_tuned_schedule(subproc):
+    """method="auto" backward pass: backward_padded must consume the tuned
+    schedule in reversed stage order, and backward(forward(x)) must
+    round-trip to the identity for a *mixed* per-stage schedule (different
+    engine, chunks and comm_dtype per exchange)."""
+    subproc("""
+import json, tempfile
+from pathlib import Path
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import tuner
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ExchangeStage, ParallelFFT
+
+cache = tempfile.mktemp(suffix=".json")
+mesh = make_mesh((2, 4), ("p0", "p1"))
+shape = (16, 12, 20)
+plan = ParallelFFT(mesh, shape, ("p0", "p1"), method="auto",
+                   comm_dtype="int8", tuner_cache=cache)
+# seed the disk cache with a hand-mixed schedule BEFORE plan.schedule is
+# first read: the plan must consume it instead of benchmarking
+mixed = [["traditional", 1, "complex64"], ["pipelined", 2, "bf16"]]
+Path(cache).write_text(json.dumps(
+    {tuner.plan_key(plan): {"schedule": mixed, "timings": {}}}))
+assert plan.schedule == tuple(tuple(s) for s in mixed)
+
+# backward executor: same schedule, reversed stage order
+bwd_sched = plan._backward_shard.keywords["schedule"]
+assert bwd_sched == plan.schedule[::-1]
+# and its exchange stages are the forward ones reversed with v/w swapped
+fwd_ex = [s for s in plan.stages if isinstance(s, ExchangeStage)]
+bwd_ex = [s for s in plan._backward_shard.keywords["stages"]
+          if isinstance(s, ExchangeStage)]
+assert [(s.v, s.w) for s in bwd_ex] == [(s.w, s.v) for s in reversed(fwd_ex)]
+
+# mixed-schedule round trip: backward(forward(x)) ~= x (bf16-stage lossy)
+rng = np.random.default_rng(0)
+x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+back = np.asarray(plan.backward(plan.forward(jnp.asarray(x))))
+rel = np.linalg.norm(back - x) / np.linalg.norm(x)
+assert rel < 1e-2, rel
+print("BACKWARD AUTO OK", rel)
+""", ndev=8)
+
+
 def test_model_flops_known_shapes():
     """Pin the 5 N log2 N accounting: c2c counts every stage at the full
     logical length; r2c halves the real stage and shrinks the Hermitian

@@ -1,0 +1,82 @@
+"""Shared quantization core (core/quant.py): codec error bounds, dtype
+canonicalization, wire ratios — single-device unit tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def test_canonical_comm_dtype():
+    assert quant.canonical_comm_dtype(None) == "complex64"
+    assert quant.canonical_comm_dtype("complex64") == "complex64"
+    assert quant.canonical_comm_dtype("BF16") == "bf16"
+    assert quant.canonical_comm_dtype("bfloat16") == "bf16"
+    assert quant.canonical_comm_dtype("int8") == "int8"
+    with pytest.raises(ValueError):
+        quant.canonical_comm_dtype("fp8")
+
+
+def test_wire_ratio():
+    assert quant.wire_ratio(None) == 1
+    assert quant.wire_ratio("complex64") == 1
+    assert quant.wire_ratio("bf16") == 2
+    assert quant.wire_ratio("int8") == 4
+
+
+@given(scale=st.floats(1e-4, 1e3), seed=st.integers(0, 1000),
+       block_axis=st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_int8_per_block_error_bound(scale, seed, block_axis):
+    """Round-trip error of the int8 codec is at most half a quantization
+    step of each block's own max-abs (the per-block scale contract)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4, 6, 8)) * scale, jnp.float32)
+    q, s = quant.quantize_int8(x, block_axis=block_axis)
+    assert q.dtype == jnp.int8 and q.shape == x.shape
+    assert s.shape == tuple(x.shape[i] if i == block_axis else 1 for i in range(3))
+    back = np.asarray(quant.dequantize_int8(q, s))
+    amax = np.max(np.abs(np.asarray(x)), axis=tuple(
+        i for i in range(3) if i != block_axis), keepdims=True)
+    assert np.all(np.abs(back - np.asarray(x)) <= amax / 127.0 + 1e-9)
+
+
+def test_int8_zero_block_safe():
+    """All-zero blocks (padding) must not divide by zero or emit NaN."""
+    q, s = quant.quantize_int8(jnp.zeros((3, 5), jnp.float32), block_axis=0)
+    out = np.asarray(quant.dequantize_int8(q, s))
+    assert np.all(out == 0) and np.all(np.isfinite(out))
+
+
+def test_bf16_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(4096), jnp.float32)
+    back = np.asarray(quant.decode_bf16(quant.encode_bf16(x)))
+    rel = np.linalg.norm(back - np.asarray(x)) / np.linalg.norm(np.asarray(x))
+    assert rel < 5e-3  # 8 mantissa bits
+    # exponent range is f32's: huge/tiny magnitudes survive
+    big = jnp.asarray([1e30, -1e-30, 3e38], jnp.float32)
+    assert np.allclose(np.asarray(quant.decode_bf16(quant.encode_bf16(big))),
+                       np.asarray(big), rtol=1e-2)
+
+
+def test_complex_planes_roundtrip():
+    rng = np.random.default_rng(1)
+    y = jnp.asarray((rng.standard_normal((3, 4)) +
+                     1j * rng.standard_normal((3, 4))).astype(np.complex64))
+    p = quant.complex_to_planes(y)
+    assert p.shape == (2, 3, 4) and p.dtype == jnp.float32
+    z = quant.planes_to_complex(p)
+    assert z.dtype == jnp.complex64
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(y))
+
+
+def test_compress_consumes_shared_core():
+    """optim/compress must be a consumer of core/quant — exactly one
+    quantization implementation in the repo."""
+    from repro.optim import compress
+
+    assert compress.quantize_int8 is quant.quantize_int8
+    assert compress._dequant is quant.dequantize_int8

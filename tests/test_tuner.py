@@ -1,6 +1,8 @@
-"""Exchange-schedule autotuner: candidate sweep, disk cache round-trip."""
+"""Exchange-schedule autotuner: candidate sweep (engines × comm_dtype
+payloads), schema-v2 disk cache round-trip, atomic writes."""
 
 import json
+import threading
 
 from repro.core import tuner
 
@@ -21,20 +23,24 @@ mesh = make_mesh((2, 2), ("p0", "p1"))
 plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto", tuner_cache=cache)
 sched = plan.schedule
 assert len(sched) == plan.n_exchanges == 2
-for method, chunks in sched:
+for method, chunks, comm_dtype in sched:
     assert method in ("fused", "traditional", "pipelined")
     assert chunks >= 1
+    # default accuracy budget is lossless: only complex64 may be picked
+    assert comm_dtype == "complex64"
 
 disk = json.loads(open(cache).read())
 key = tuner.plan_key(plan)
 assert key in disk
+assert json.loads(key)["schema"] == tuner.SCHEMA_VERSION
+assert "device_kind" in json.loads(key)
 assert [tuple(s) for s in disk[key]["schedule"]] == list(sched)
 # every candidate was timed for both exchange stages
 stages = disk[key]["timings"]
 assert len(stages) == 2
 for per in stages.values():
     timed = {{k: v for k, v in per.items() if ":" not in k}}  # drop error notes
-    assert set(timed) == {{f"{{m}}@{{c}}" for m, c in tuner.DEFAULT_CANDIDATES}}
+    assert set(timed) == {{f"{{m}}@{{c}}@{{d}}" for m, c, d in tuner.DEFAULT_CANDIDATES}}
     assert all(t > 0 for t in timed.values())
 
 # fresh-memo reload: poison tune_plan; a cache hit must not call it
@@ -50,6 +56,44 @@ print("TUNER CACHE OK", json.dumps([list(s) for s in sched]))
     assert "TUNER CACHE OK" in out
 
 
+def test_tuner_comm_dtype_budget_cache_roundtrip(subproc, tmp_path):
+    """An int8 accuracy budget widens the sweep to engines × {complex64,
+    bf16, int8}; per-stage comm_dtype choices round-trip through the disk
+    cache into a fresh process (issue acceptance criterion)."""
+    cache = tmp_path / "fft_tuner.json"
+    code = f"""
+import json
+from repro.core import tuner
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+cache = {str(cache)!r}
+mesh = make_mesh((2, 2), ("p0", "p1"))
+plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
+                   comm_dtype="int8", tuner_cache=cache)
+sched = plan.schedule
+assert len(sched) == 2
+for method, chunks, comm_dtype in sched:
+    assert comm_dtype in ("complex64", "bf16", "int8")
+
+disk = json.loads(open(cache).read())
+key = tuner.plan_key(plan)
+want_tags = {{f"{{m}}@{{c}}@{{d}}" for m, c, d in tuner.candidates_for("int8")}}
+for per in disk[key]["timings"].values():
+    assert {{k for k in per if ":" not in k}} == want_tags
+
+# a fresh process (memo empty) must reload the same 3-field schedule
+tuner._MEMO.clear()
+tuner.tune_plan = None  # cache hit must not benchmark
+plan2 = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
+                    comm_dtype="int8", tuner_cache=cache)
+assert plan2.schedule == sched
+print("BUDGET CACHE OK", json.dumps([list(s) for s in sched]))
+"""
+    out = subproc(code, ndev=4)
+    assert "BUDGET CACHE OK" in out
+
+
 def test_plan_key_discriminates():
     """Key must change with anything that changes stage shapes/engines."""
     from repro.core.meshutil import make_mesh
@@ -63,16 +107,59 @@ def test_plan_key_discriminates():
         ParallelFFT(mesh, (8, 8, 8), ("p0", "p1"), method="auto"),
         ParallelFFT(mesh, (8, 8, 8), ("p0",), real=True, method="auto"),
         ParallelFFT(mesh, (8, 8, 8), ("p0",), impl="matmul", method="auto"),
+        ParallelFFT(mesh, (8, 8, 8), ("p0",), method="auto", comm_dtype="bf16"),
+        ParallelFFT(mesh, (8, 8, 8), ("p0",), method="auto", comm_dtype="int8"),
     ):
         keys.add(tuner.plan_key(plan))
-    assert len(keys) == 5
+    assert len(keys) == 7
     # keys are deterministic and json-round-trippable
     assert tuner.plan_key(base) == tuner.plan_key(base)
-    assert json.loads(tuner.plan_key(base))["shape"] == [8, 8, 8]
+    decoded = json.loads(tuner.plan_key(base))
+    assert decoded["shape"] == [8, 8, 8]
+    # hardware identity: timings from different device generations under
+    # the same backend string must not collide
+    assert decoded["schema"] == tuner.SCHEMA_VERSION
+    assert decoded["device_kind"]
+    assert decoded["backend"]
 
 
-def test_default_candidates_cover_issue_matrix():
-    assert ("fused", 1) in tuner.DEFAULT_CANDIDATES
-    assert ("traditional", 1) in tuner.DEFAULT_CANDIDATES
+def test_candidates_cover_issue_matrix():
+    assert ("fused", 1) in tuner.ENGINE_CANDIDATES
+    assert ("traditional", 1) in tuner.ENGINE_CANDIDATES
     for c in (2, 4, 8):
-        assert ("pipelined", c) in tuner.DEFAULT_CANDIDATES
+        assert ("pipelined", c) in tuner.ENGINE_CANDIDATES
+    # default budget is lossless
+    assert set(d for _, _, d in tuner.DEFAULT_CANDIDATES) == {"complex64"}
+    # the ladder is monotone: each budget adds payloads, never drops them
+    assert set(tuner.candidates_for("bf16")) > set(tuner.candidates_for(None))
+    assert set(tuner.candidates_for("int8")) > set(tuner.candidates_for("bf16"))
+    for m, c, d in tuner.candidates_for("int8"):
+        assert (m, c) in tuner.ENGINE_CANDIDATES
+        assert d in ("complex64", "bf16", "int8")
+
+
+def test_save_cache_atomic(tmp_path):
+    """save_cache must never leave a partially-written cache visible: the
+    final file is always complete JSON and no temp droppings remain."""
+    path = tmp_path / "sub" / "cache.json"
+    data = {"k": {"schedule": [["fused", 1, "complex64"]], "timings": {}}}
+    assert tuner.save_cache(path, data)
+    assert json.loads(path.read_text()) == data
+    # overwrite with concurrent writers: every reader observes valid JSON
+    errs = []
+
+    def writer(i):
+        try:
+            assert tuner.save_cache(path, {f"key{i}": i})
+            json.loads(path.read_text())
+        except Exception as e:  # pragma: no cover - failure reporting
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert not errs
+    json.loads(path.read_text())  # final state is one writer's full payload
+    # no temp files left behind
+    leftovers = [p for p in path.parent.iterdir() if p.name != path.name]
+    assert leftovers == []
