@@ -19,7 +19,6 @@ pack/unpack copies while moving the same collective payload).
 """
 
 import json
-import sys
 from pathlib import Path
 
 import jax

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 
 import jax
@@ -27,7 +26,7 @@ import numpy as np
 
 
 def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
-               comm_dtype=None, tuner_cache=None):
+               comm_dtype=None, tuner_cache=None, transforms=None):
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ParallelFFT
 
@@ -35,10 +34,9 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
         mesh = make_mesh((ndev,), ("p0",))
         grid = ("p0",)
     elif gridspec == "pencil":
-        a = int(np.sqrt(ndev))
-        while ndev % a:
-            a -= 1
-        mesh = make_mesh((a, ndev // a), ("p0", "p1"))
+        from repro.core.meshutil import balanced_dims
+
+        mesh = make_mesh(balanced_dims(ndev), ("p0", "p1"))
         grid = ("p0", "p1")
     elif gridspec == "grid3":
         dims = []
@@ -54,6 +52,10 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
         grid = ("p0", "p1", "p2")
     else:
         raise ValueError(gridspec)
+    if transforms:
+        return ParallelFFT(mesh, shape, grid, transforms=transforms,
+                           method=method, impl=impl, chunks=chunks,
+                           comm_dtype=comm_dtype, tuner_cache=tuner_cache)
     return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl,
                        chunks=chunks, comm_dtype=comm_dtype,
                        tuner_cache=tuner_cache)
@@ -62,33 +64,35 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
 def exchanges_only(plan):
     """A jit'd function running only the plan's exchange stages (paper's
     'global redistribution' timing split)."""
-    from functools import partial
-
     from repro.core.meshutil import shard_map
     from repro.core.pfft import ExchangeStage
     from repro.core.redistribute import exchange_shard
 
-    stages = [(s, b, a) for s, b, a in zip(plan.stages, plan.pencil_trace,
-                                           plan.pencil_trace[1:])
+    stages = [(s, b, a, dt) for s, b, a, dt in
+              zip(plan.stages, plan.pencil_trace, plan.pencil_trace[1:],
+                  plan.dtype_trace)
               if isinstance(s, ExchangeStage)]
 
     schedule = plan.schedule  # resolves "auto" to the tuned per-stage mix
 
     def run(block):
-        for ex_i, (st, before, after) in enumerate(stages):
-            # emulate the fft-stage shape change between exchanges
-            if block.shape != tuple(np.array(before.local_shape)):
-                block = jnp.zeros(before.local_shape, block.dtype)
+        for ex_i, (st, before, after, dtype) in enumerate(stages):
+            # emulate the fft-stage shape *and dtype* change between
+            # exchanges (an r2c mid-plan means later exchanges carry
+            # complex64 while earlier ones carried f32)
+            if (block.shape != tuple(np.array(before.local_shape))
+                    or block.dtype != dtype):
+                block = jnp.zeros(before.local_shape, dtype)
             method, chunks, comm_dtype = schedule[ex_i]
             block = exchange_shard(block, st.v, st.w, st.group,
                                    method=method, chunks=chunks,
                                    comm_dtype=comm_dtype)
         return block
 
-    first = stages[0][1]
+    first, first_dtype = stages[0][1], stages[0][3]
     fn = shard_map(run, mesh=plan.mesh, in_specs=first.spec,
                    out_specs=stages[-1][2].spec, check_vma=False)
-    return jax.jit(fn), first
+    return jax.jit(fn), first, first_dtype
 
 
 METHODS = ("fused", "traditional", "pipelined", "auto")
@@ -108,13 +112,19 @@ def _best_of(once, xg, *, outer, inner):
     return best
 
 
+def _make_input(plan, shape):
+    """Random logical input at the plan's true input dtype (real for r2c
+    and all-real dct/dst transform plans, complex otherwise)."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(shape).astype(np.float32)
+    if plan.input_dtype == jnp.complex64:
+        x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    return x
+
+
 def _time_plan(plan, shape, args):
     """Time one forward+backward round trip of ``plan`` (total measure)."""
-    rng = np.random.default_rng(0)
-    if args.real:
-        x = rng.standard_normal(shape).astype(np.float32)
-    else:
-        x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    x = _make_input(plan, shape)
     from repro.core.pencil import pad_global
 
     xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
@@ -141,6 +151,10 @@ def main(argv=None):
                     help="time all four methods x all --comm-dtypes payloads "
                          "and report one table")
     ap.add_argument("--real", action="store_true")
+    ap.add_argument("--transforms", type=str, default=None,
+                    help="comma list of per-axis transform tags (c2c, r2c, "
+                         "dct2, dct3, dst2, dst3), overriding --real; e.g. "
+                         "--transforms dct2,c2c,r2c")
     ap.add_argument("--impl", default="jnp")
     ap.add_argument("--inner", type=int, default=3)
     ap.add_argument("--outer", type=int, default=10)
@@ -148,46 +162,54 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     shape = tuple(int(s) for s in args.shape.split(","))
+    if args.transforms and args.real:
+        ap.error("--transforms and --real are mutually exclusive "
+                 "(use --transforms ...,r2c for a real plan)")
+    transforms = tuple(args.transforms.split(",")) if args.transforms else None
     ndev = len(jax.devices())
     if args.compare:
         out = {"shape": shape, "grid": args.grid, "real": bool(args.real),
+               "transforms": list(transforms) if transforms else None,
                "ndev": ndev, "methods": {}}
         for method in METHODS:
             for comm_dtype in args.comm_dtypes.split(","):
                 plan = build_plan(shape, args.grid, ndev, real=args.real,
                                   method=method, impl=args.impl,
                                   chunks=args.chunks, comm_dtype=comm_dtype,
-                                  tuner_cache=args.tune_cache)
+                                  tuner_cache=args.tune_cache,
+                                  transforms=transforms)
+                if not out["methods"]:
+                    # the workload's true input kind, once from the first
+                    # plan (a --transforms plan can be real without --real)
+                    out["real"] = bool(plan.input_dtype == jnp.float32)
                 out["methods"][f"{method}@{comm_dtype}"] = {
                     "comm_dtype": comm_dtype,
                     "best_s": _time_plan(plan, shape, args),
                     "schedule": [list(s) for s in plan.schedule],
-                    # exchanges carry complex64 payloads even for r2c plans
-                    # (they run after the r2c stage): all comm terms use
-                    # itemsize 8, matching the single-run report
-                    "model_time_s": plan.model_time_s(itemsize=8),
-                    "wire_bytes_per_dev": plan.comm_bytes_per_device(8),
+                    # itemsize=None prices each exchange at its traced
+                    # dtype width (complex64 after the r2c stage, f32 for
+                    # exchanges of still-real dct/dst data)
+                    "model_time_s": plan.model_time_s(itemsize=None),
+                    "wire_bytes_per_dev": plan.comm_bytes_per_device(None),
                 }
         print(json.dumps(out))
         return
     plan = build_plan(shape, args.grid, ndev, real=args.real,
                       method=args.method, impl=args.impl, chunks=args.chunks,
-                      comm_dtype=args.comm_dtype, tuner_cache=args.tune_cache)
+                      comm_dtype=args.comm_dtype, tuner_cache=args.tune_cache,
+                      transforms=transforms)
 
-    rng = np.random.default_rng(0)
-    if args.real:
-        x = rng.standard_normal(shape).astype(np.float32)
-    else:
-        x = (rng.standard_normal(shape) + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    x = _make_input(plan, shape)
     from repro.core.pencil import pad_global
 
     xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
                         plan.input_pencil.sharding)
 
     if args.measure == "redistribution":
-        fn, first = exchanges_only(plan)
+        rng = np.random.default_rng(0)
+        fn, first, first_dtype = exchanges_only(plan)
         buf = rng.standard_normal(first.physical).astype(np.float32)
-        if not args.real:
+        if first_dtype == jnp.complex64:
             buf = (buf + 1j * rng.standard_normal(first.physical)).astype(np.complex64)
         xg = jax.device_put(jnp.asarray(buf), first.sharding)
 
@@ -203,9 +225,11 @@ def main(argv=None):
     print(json.dumps({
         "shape": shape, "grid": args.grid, "method": args.method,
         "comm_dtype": plan.comm_dtype,
-        "real": bool(args.real), "ndev": ndev, "measure": args.measure,
+        "real": bool(plan.input_dtype == jnp.float32),
+        "ndev": ndev, "measure": args.measure,
+        "transforms": [sp.tag() for sp in plan.transforms],
         "best_s": best,
-        "comm_bytes_per_dev": plan.comm_bytes_per_device(8),
+        "comm_bytes_per_dev": plan.comm_bytes_per_device(None),
         "model_flops": plan.model_flops(),
     }))
 

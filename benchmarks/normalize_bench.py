@@ -1,0 +1,68 @@
+"""Normalize a ``fftbench --compare`` JSON blob into a flat BENCH record.
+
+The perf trajectory across PRs needs comparable data points; the raw
+--compare output nests per-(method, comm_dtype) rows with schedules and
+model terms.  This script reduces it to the stable schema
+
+    {"schema": "bench-v1", "pr": N, "shape": [...], "grid": "...",
+     "ndev": N, "real": bool,
+     "methods": {"fused@complex64": {"best_s": ..., "model_time_s": ...,
+                 "wire_bytes_per_dev": ...}, ...},
+     "best": {"method": "...", "best_s": ...}}
+
+Usage:
+    python benchmarks/normalize_bench.py fftbench.json --pr 3 --out BENCH_pr3.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def normalize(raw: dict, pr: int | None = None) -> dict:
+    rows = {}
+    for tag, rec in raw["methods"].items():
+        rows[tag] = {
+            "best_s": rec["best_s"],
+            "model_time_s": rec.get("model_time_s"),
+            "wire_bytes_per_dev": rec.get("wire_bytes_per_dev"),
+            "schedule": rec.get("schedule"),
+        }
+    best_tag = min(rows, key=lambda t: rows[t]["best_s"])
+    out = {
+        "schema": "bench-v1",
+        "shape": list(raw["shape"]),
+        "grid": raw["grid"],
+        "ndev": raw["ndev"],
+        "real": bool(raw.get("real", False)),
+        # identifies the workload: a dct/pruned plan of the same shape is
+        # not comparable to the plain c2c plan
+        "transforms": raw.get("transforms"),
+        "methods": rows,
+        "best": {"method": best_tag, "best_s": rows[best_tag]["best_s"]},
+    }
+    if pr is not None:
+        out["pr"] = pr
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("raw", help="fftbench --compare JSON output (file)")
+    ap.add_argument("--pr", type=int, default=None, help="PR number tag")
+    ap.add_argument("--out", default=None, help="output path (default: stdout)")
+    args = ap.parse_args(argv)
+    # the compare table is the last JSON line (fftbench may log above it)
+    last = Path(args.raw).read_text().strip().splitlines()[-1]
+    rec = normalize(json.loads(last), pr=args.pr)
+    text = json.dumps(rec, indent=1, sort_keys=True)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,6 @@ measured half of the hypothesis→change→measure log in EXPERIMENTS.md.
 from __future__ import annotations
 
 import json
-import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent

@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.meshutil import make_mesh
+from repro.core.meshutil import balanced_dims, make_mesh
 from repro.core.pfft import ParallelFFT
 
-# 2-D process grid (3x4 in the paper's Fig. 3; 2x4 here on 8 host devices)
-mesh = make_mesh((2, 4), ("p0", "p1"))
+# 2-D process grid (3x4 in the paper's Fig. 3; 2x4 here on 8 host devices —
+# adapts to however many devices the XLA_FLAGS above actually provide)
+mesh = make_mesh(balanced_dims(len(jax.devices())), ("p0", "p1"))
 
 # global 3-D array, paper Appendix A uses {42, 127, 256} — deliberately
 # non-divisible extents to exercise the padding policy

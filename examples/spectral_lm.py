@@ -14,7 +14,6 @@ Run:  PYTHONPATH=src python examples/spectral_lm.py
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.meshutil import make_mesh
 from repro.core.pfft import ParallelFFT

@@ -1,42 +1,322 @@
-"""Local (serial) FFT dispatch — the paper's ``seqxfftn``.
+"""Local (serial) transform dispatch — the paper's ``seqxfftn``, generalized.
 
-The paper assumes a vendor serial FFT (FFTW/MKL/ESSL).  Here the "vendor"
-choices are:
+The paper assumes a vendor serial FFT (FFTW/MKL/ESSL) and promises the
+machinery applies to "Fourier (or similar) transforms".  This module is
+where that generality lives: a per-axis :class:`TransformSpec` describes
+*which* 1-D transform each axis gets, and :func:`local_transform` executes
+one stage of it in either direction.
+
+Supported kinds (P3DFFT ships pruned/real transforms as first-class plan
+options; FLUPS shows per-axis flexibility is what opens new solver
+workloads):
+
+``c2c``            — complex FFT/iFFT (``jnp.fft`` convention: forward
+                     unnormalized, backward 1/n).
+``r2c``            — real-input FFT, Hermitian-reduced to ``n//2+1`` bins;
+                     backward is ``irfft(n=...)``.
+``dct`` (II / III) — cosine transform via the FFT-based even/odd extension
+                     trick (Makhoul), scipy's unnormalized convention;
+                     backward is the exact inverse.  Real-to-real: applied
+                     to a complex block it transforms re/im independently.
+``dst`` (II / III) — sine transform, reduced to the DCT by
+                     ``DST-II(x) = reverse(DCT-II((-1)^j x))``.
+``pruned`` / ``n_keep`` — truncated spectrum: the forward transform keeps
+                     only ``n_keep`` retained modes (centered ±k/2 split
+                     for c2c, the leading bins for r2c); backward
+                     zero-scatters them back before the inverse transform.
+                     With ``n = 3·n_keep/2`` this is exactly the 3/2-rule
+                     dealiased transform of pseudo-spectral solvers.
+
+Local FFT "vendors":
 
 ``impl="jnp"``     — ``jnp.fft`` (XLA FFT HLO).  Reference path; used for
                      oracles and the CPU container.
-``impl="matmul"``  — four-step matmul DFT on the MXU via the Pallas kernel in
-                     ``repro.kernels.fft`` (TPU-native adaptation, DESIGN.md
-                     §4).  Falls back to a pure-jnp matmul DFT for axis
-                     lengths the kernel does not tile.
+``impl="matmul"``  — four-step matmul DFT on the MXU via the Pallas kernel
+                     in ``repro.kernels.fft``; DCT/DST axes run as a single
+                     transform-matrix matmul (``dct_matmul``/``dst_matmul``).
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 
 FORWARD = -1
 BACKWARD = +1
 
+_KINDS = ("c2c", "r2c", "dct", "dst")
 
-def local_fft(x, axis: int, sign: int, *, impl: str = "jnp", real: str | None = None, n: int | None = None):
-    """1-D transform along ``axis`` of a locally-complete (possibly padded
-    elsewhere) block.  ``real`` ∈ {None, "r2c", "c2r"}; ``n`` is the logical
-    length for c2r."""
+
+@dataclass(frozen=True)
+class TransformSpec:
+    """One axis's 1-D transform.
+
+    ``kind``      — "c2c" | "r2c" | "dct" | "dst".
+    ``trig_type`` — 2 or 3 (dct/dst only; the forward type — backward is
+                    its exact inverse).
+    ``n_keep``    — retained spectral modes (c2c/r2c only); ``None`` keeps
+                    the full spectrum.
+    """
+
+    kind: str = "c2c"
+    trig_type: int = 2
+    n_keep: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown transform kind {self.kind!r}")
+        if self.kind in ("dct", "dst") and self.trig_type not in (2, 3):
+            raise ValueError(f"{self.kind} type must be 2 or 3, got {self.trig_type}")
+        if self.n_keep is not None:
+            if self.kind in ("dct", "dst"):
+                raise ValueError("n_keep (pruning) applies to c2c/r2c axes only")
+            if self.n_keep < 1:
+                raise ValueError(f"n_keep must be >= 1, got {self.n_keep}")
+
+    # -- factories ----------------------------------------------------------
+
+    @staticmethod
+    def c2c(n_keep: int | None = None) -> "TransformSpec":
+        return TransformSpec("c2c", n_keep=n_keep)
+
+    @staticmethod
+    def r2c(n_keep: int | None = None) -> "TransformSpec":
+        return TransformSpec("r2c", n_keep=n_keep)
+
+    @staticmethod
+    def dct(trig_type: int = 2) -> "TransformSpec":
+        return TransformSpec("dct", trig_type=trig_type)
+
+    @staticmethod
+    def dst(trig_type: int = 2) -> "TransformSpec":
+        return TransformSpec("dst", trig_type=trig_type)
+
+    @staticmethod
+    def pruned(n_keep: int) -> "TransformSpec":
+        """Truncated complex spectrum (centered keep): with a grid of
+        ``n = 3*n_keep//2`` points this is the 3/2-rule dealiased axis.
+
+        Note (even ``n_keep`` in a plan with an r2c axis): the kept set
+        {-n_keep/2, …, n_keep/2-1} is not symmetric — the -n_keep/2 mode
+        has no +n_keep/2 partner, so the irfft's Hermitian projection
+        halves its kz=0-plane content per round trip.  Valid spectra keep
+        that row zero (what dealiased pseudo-spectral solvers do anyway;
+        mpi4py-fft's padded transforms share this convention)."""
+        return TransformSpec("c2c", n_keep=n_keep)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def real_to_real(self) -> bool:
+        """Transform maps real -> real (complex blocks: re/im separately)."""
+        return self.kind in ("dct", "dst")
+
+    def spectral_extent(self, n: int) -> int:
+        """Logical length of the forward output for an ``n``-point axis."""
+        base = n // 2 + 1 if self.kind == "r2c" else n
+        if self.n_keep is not None:
+            if self.n_keep > base:
+                raise ValueError(f"n_keep={self.n_keep} exceeds spectrum length {base} (n={n})")
+            return self.n_keep
+        return base
+
+    def tag(self) -> str:
+        """Stable string form (tuner cache keys, benchmark reports)."""
+        if self.kind in ("dct", "dst"):
+            return f"{self.kind}{self.trig_type}"
+        return self.kind if self.n_keep is None else f"{self.kind}[{self.n_keep}]"
+
+
+def as_spec(s) -> TransformSpec:
+    """Coerce a user-facing transform description to a TransformSpec:
+    accepts a TransformSpec or a tag string ("c2c", "r2c", "dct2", "dct3",
+    "dst2", "dst3")."""
+    if isinstance(s, TransformSpec):
+        return s
+    if isinstance(s, str):
+        if s in ("c2c", "r2c"):
+            return TransformSpec(s)
+        if s in ("dct2", "dct3", "dst2", "dst3"):
+            return TransformSpec(s[:3], trig_type=int(s[3]))
+        raise ValueError(f"unknown transform tag {s!r}")
+    raise TypeError(f"cannot interpret {s!r} as a TransformSpec")
+
+
+def dealias_grid(n_keep: int) -> int:
+    """Physical grid size of the 3/2-rule dealiased axis keeping ``n_keep``
+    modes (the M of M = 3N/2)."""
+    return (3 * n_keep) // 2
+
+
+# ---------------------------------------------------------------------------
+# Transform application
+# ---------------------------------------------------------------------------
+
+
+def local_transform(x, axis: int, sign: int, spec: TransformSpec, *, n: int, impl: str = "jnp"):
+    """One stage of the plan along a locally-complete ``axis``.
+
+    Forward (``sign == FORWARD``): input logical length ``n`` ->
+    ``spec.spectral_extent(n)``.  Backward: the exact reverse.  Pruning
+    (``spec.n_keep``) is folded in here — the forward gather / backward
+    zero-scatter is emitted adjacent to the transform so it fuses with the
+    surrounding exchange unpack instead of costing a separate HBM pass.
+    """
+    if spec.kind == "c2c":
+        if sign == FORWARD:
+            y = _fft(x, axis, FORWARD, impl)
+            if spec.n_keep is not None:
+                y = _keep_centered(y, axis, spec.n_keep)
+            return y
+        if spec.n_keep is not None:
+            x = _scatter_centered(x, axis, n, spec.n_keep)
+        return _fft(x, axis, BACKWARD, impl)
+
+    if spec.kind == "r2c":
+        nbins = n // 2 + 1
+        if sign == FORWARD:
+            y = _rfft(x, axis, impl)
+            if spec.n_keep is not None:
+                y = jnp.take(y, jnp.arange(spec.n_keep), axis=axis)
+            return y
+        if spec.n_keep is not None and spec.n_keep < nbins:
+            pads = [(0, 0)] * x.ndim
+            pads[axis] = (0, nbins - spec.n_keep)
+            x = jnp.pad(x, pads)
+        return _irfft(x, axis, n, impl)
+
+    # dct / dst: real-to-real, forward type 2 or 3, backward its inverse
+    inverse = sign == BACKWARD
+    trig_type = spec.trig_type if not inverse else {2: 3, 3: 2}[spec.trig_type]
+    fn = _dct_complex_safe if spec.kind == "dct" else _dst_complex_safe
+    return fn(x, axis, trig_type, impl, scale=(1.0 / (2 * n)) if inverse else 1.0)
+
+
+# -- FFT vendor dispatch ----------------------------------------------------
+
+
+def _fft(x, axis, sign, impl):
     if impl == "jnp":
-        if real == "r2c":
-            assert sign == FORWARD
-            return jnp.fft.rfft(x, axis=axis)
-        if real == "c2r":
-            assert sign == BACKWARD
-            return jnp.fft.irfft(x, n=n, axis=axis)
         return jnp.fft.fft(x, axis=axis) if sign == FORWARD else jnp.fft.ifft(x, axis=axis)
     if impl == "matmul":
         from repro.kernels.fft import ops as fft_ops
 
-        if real == "r2c":
-            return fft_ops.rfft_matmul(x, axis=axis)
-        if real == "c2r":
-            return fft_ops.irfft_matmul(x, n=n, axis=axis)
         return fft_ops.fft_matmul(x, axis=axis, inverse=(sign == BACKWARD))
     raise ValueError(f"unknown fft impl {impl!r}")
+
+
+def _rfft(x, axis, impl):
+    if impl == "jnp":
+        return jnp.fft.rfft(x, axis=axis)
+    if impl == "matmul":
+        from repro.kernels.fft import ops as fft_ops
+
+        return fft_ops.rfft_matmul(x, axis=axis)
+    raise ValueError(f"unknown fft impl {impl!r}")
+
+
+def _irfft(x, axis, n, impl):
+    if impl == "jnp":
+        return jnp.fft.irfft(x, n=n, axis=axis)
+    if impl == "matmul":
+        from repro.kernels.fft import ops as fft_ops
+
+        return fft_ops.irfft_matmul(x, n=n, axis=axis)
+    raise ValueError(f"unknown fft impl {impl!r}")
+
+
+# -- pruning (truncated spectra / 3/2-rule dealiasing) ----------------------
+
+
+def _keep_centered(y, axis, k):
+    """Keep the ``k`` lowest-|frequency| modes of an fft-ordered axis:
+    the first ceil(k/2) (non-negative) and last floor(k/2) (negative)."""
+    n = y.shape[axis]
+    if k == n:
+        return y
+    head = (k + 1) // 2
+    tail = k - head
+    lo = jnp.take(y, jnp.arange(head), axis=axis)
+    if tail == 0:
+        return lo
+    hi = jnp.take(y, jnp.arange(n - tail, n), axis=axis)
+    return jnp.concatenate([lo, hi], axis=axis)
+
+
+def _scatter_centered(y, axis, n, k):
+    """Inverse of :func:`_keep_centered`: zero-pad the retained modes back
+    into an ``n``-long fft-ordered axis."""
+    if k == n:
+        return y
+    head = (k + 1) // 2
+    tail = k - head
+    lo = jnp.take(y, jnp.arange(head), axis=axis)
+    mid_shape = list(y.shape)
+    mid_shape[axis] = n - k
+    mid = jnp.zeros(mid_shape, y.dtype)
+    if tail == 0:
+        return jnp.concatenate([lo, mid], axis=axis)
+    hi = jnp.take(y, jnp.arange(head, k), axis=axis)
+    return jnp.concatenate([lo, mid, hi], axis=axis)
+
+
+# -- DCT / DST via the FFT-based even/odd extension trick -------------------
+
+
+def _dct_complex_safe(x, axis, trig_type, impl, scale=1.0):
+    if jnp.iscomplexobj(x):
+        return (_dct_real(jnp.real(x), axis, trig_type, impl)
+                + 1j * _dct_real(jnp.imag(x), axis, trig_type, impl)) * scale
+    y = _dct_real(x, axis, trig_type, impl)
+    return y * scale if scale != 1.0 else y
+
+
+def _dst_complex_safe(x, axis, trig_type, impl, scale=1.0):
+    """DST-II/III via the DCT: DST-II(x) = reverse(DCT-II((-1)^j x)),
+    DST-III(x) = (-1)^k DCT-III(reverse(x)).  The matmul impl skips the
+    reduction and applies the sine matrix in one shot."""
+    if impl == "matmul":
+        from repro.kernels.fft import ops as fft_ops
+
+        y = fft_ops.dst_matmul(x, axis=axis, trig_type=trig_type)
+        return y * scale if scale != 1.0 else y
+    n = x.shape[axis]
+    sgn = _alternating(n, x.ndim, axis)
+    if trig_type == 2:
+        y = _dct_complex_safe(x * sgn, axis, 2, impl, scale=scale)
+        return jnp.flip(y, axis=axis)
+    y = _dct_complex_safe(jnp.flip(x, axis=axis), axis, 3, impl, scale=scale)
+    return y * sgn
+
+
+def _alternating(n, ndim, axis):
+    s = (-1.0) ** jnp.arange(n, dtype=jnp.float32)
+    return s.reshape([n if i == axis % ndim else 1 for i in range(ndim)])
+
+
+def _dct_real(x, axis, trig_type, impl):
+    """Unnormalized (scipy-convention) DCT-II or DCT-III of a real block."""
+    if impl == "matmul":
+        from repro.kernels.fft import ops as fft_ops
+
+        return fft_ops.dct_matmul(x, axis=axis, trig_type=trig_type)
+    n = x.shape[axis]
+    xl = jnp.moveaxis(x, axis, -1)
+    if trig_type == 2:
+        # Makhoul: permute to v = [x0, x2, ..., x5, x3, x1], one length-n FFT
+        v = jnp.concatenate([xl[..., ::2], xl[..., 1::2][..., ::-1]], axis=-1)
+        vf = jnp.fft.fft(v, axis=-1)
+        k = jnp.arange(n)
+        y = jnp.real(2 * jnp.exp(-1j * jnp.pi * k / (2 * n)) * vf)
+    else:
+        # DCT-III = 2n x the inverse of DCT-II (verified vs scipy)
+        k = jnp.arange(n)
+        xr = jnp.concatenate([jnp.zeros_like(xl[..., :1]), xl[..., :0:-1]], axis=-1)
+        vf = 0.5 * jnp.exp(1j * jnp.pi * k / (2 * n)) * (xl - 1j * xr)
+        v = jnp.real(jnp.fft.ifft(vf, axis=-1)) * (2 * n)
+        h = (n + 1) // 2
+        y = jnp.zeros_like(xl)
+        y = y.at[..., ::2].set(v[..., :h])
+        y = y.at[..., 1::2].set(v[..., h:][..., ::-1])
+    return jnp.moveaxis(y.astype(x.dtype), -1, axis)

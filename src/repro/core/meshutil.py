@@ -47,6 +47,15 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
 
 
+def balanced_dims(ndev: int) -> tuple[int, int]:
+    """Factor ``ndev`` into the most-square (a, b) with a*b == ndev, a <= b
+    — the 2-D process grid the examples/benchmarks use for pencil plans."""
+    a = int(ndev**0.5)
+    while ndev % a:
+        a -= 1
+    return a, ndev // a
+
+
 def make_mesh(shape: tuple[int, ...], axis_names: tuple[str, ...]) -> Mesh:
     """``jax.make_mesh`` with explicit Auto axis types where supported
     (stable across 0.8→0.9); plain mesh on jax < 0.6."""

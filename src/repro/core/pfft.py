@@ -16,6 +16,18 @@ all-to-all ("fused"), the traditional transpose+all-to-all baseline
 FFTs ("pipelined", comm/compute overlap), or the autotuned per-stage mix
 ("auto", see :mod:`repro.core.tuner`).
 
+Per-axis transforms (``transforms=``): each axis carries a
+:class:`repro.core.fftcore.TransformSpec` — c2c, r2c, DCT-II/III, DST-II/III,
+or a pruned/truncated spectrum (``n_keep``).  ``real=True`` stays as sugar
+for "r2c on the last axis, c2c elsewhere".  Pruned axes fold 3/2-rule
+dealiasing into the plan itself: the truncation happens inside the FFT
+stage right next to the exchange unpack, so downstream exchanges ship only
+the retained modes (the dealiased Navier–Stokes pipeline pays *less* wire
+traffic than the undealiased one, not an extra HBM pass).  Spectral extents
+therefore differ stage by stage between the forward and backward plans;
+``pencil_trace``/``dtype_trace`` record the (extent, dtype) state before
+every stage and all analytic models read them.
+
 The whole plan executes inside a single ``shard_map``, so XLA sees the
 entire FFT↔collective pipeline and can schedule/overlap it (the TPU
 equivalent of taking data rearrangement off the critical path).
@@ -29,10 +41,10 @@ from functools import cached_property, partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import fftcore
+from repro.core.fftcore import TransformSpec, as_spec
 from repro.core.meshutil import shard_map
 from repro.core.decomp import pad_to_multiple
 from repro.core.pencil import Group, Pencil, group_size, make_pencil, pad_global, unpad_global
@@ -50,8 +62,8 @@ Schedule = tuple[tuple[str, int, str], ...]
 @dataclass(frozen=True)
 class FFTStage:
     axis: int
-    real: str | None  # None | "r2c" | "c2r"
-    logical_n: int  # logical transform length (pre-transform for r2c, output for c2r)
+    spec: TransformSpec
+    n: int  # full (physical-grid) transform length; spectral extent is spec.spectral_extent(n)
 
 
 @dataclass(frozen=True)
@@ -65,14 +77,21 @@ Stage = FFTStage | ExchangeStage
 
 
 class ParallelFFT:
-    """Plan + executor for a distributed d-dim FFT.
+    """Plan + executor for a distributed d-dim transform.
 
     Args:
       mesh:   jax Mesh (any dimensionality; unrelated axes are untouched).
-      shape:  logical global array shape (d axes).
+      shape:  logical global array shape (d axes) — the *physical-grid*
+              extents; pruned axes emit fewer spectral modes than this.
       grid:   k mesh axis names (or tuples of names) decomposing array axes
               0..k-1, k ≤ d-1.  (C row-major convention, like the paper.)
-      real:   r2c/c2r transform (real input, Hermitian-reduced last axis).
+      real:   sugar for ``transforms`` = all-c2c with r2c on the last axis.
+      transforms: per-axis :class:`TransformSpec` (or tag strings "c2c",
+              "r2c", "dct2", "dct3", "dst2", "dst3"), length d.  Transforms
+              are applied in descending axis order; an r2c axis must come
+              before any complex-producing axis in that order (i.e. every
+              axis to its right is dct/dst), and at most one r2c is
+              allowed.  Mutually exclusive with ``real=True``.
       method: "fused" (paper) | "traditional" (baseline) |
               "pipelined" (sliced exchange overlapped with next-stage FFTs) |
               "auto" (per-stage micro-benchmarked schedule, cached on disk).
@@ -96,6 +115,7 @@ class ParallelFFT:
         grid: tuple[Group, ...],
         *,
         real: bool = False,
+        transforms=None,
         method: str = "fused",
         impl: str = "jnp",
         chunks: int = 4,
@@ -107,8 +127,31 @@ class ParallelFFT:
             raise ValueError(f"need 1 <= len(grid)={k} <= d-1={d - 1}")
         if method not in ("fused", "traditional", "pipelined", "auto"):
             raise ValueError(f"unknown method {method!r}")
+        if transforms is not None:
+            if real:
+                raise ValueError("pass either real=True or transforms=, not both")
+            specs = tuple(as_spec(s) for s in transforms)
+            if len(specs) != d:
+                raise ValueError(f"transforms must have one spec per axis: got {len(specs)}, need {d}")
+        else:
+            specs = tuple(
+                TransformSpec.r2c() if (real and a == d - 1) else TransformSpec.c2c()
+                for a in range(d)
+            )
+        # dtype legality in apply order (axis d-1 → 0): r2c must see real data
+        seen_complex = False
+        for a in range(d - 1, -1, -1):
+            if specs[a].kind == "r2c":
+                if seen_complex:
+                    raise ValueError(
+                        f"r2c on axis {a} would see complex data: every axis after it "
+                        f"(higher index) must be dct/dst, and only one r2c is allowed")
+                seen_complex = True
+            elif specs[a].kind == "c2c":
+                seen_complex = True
+        self.transforms = specs
         self.mesh, self.shape, self.grid = mesh, tuple(shape), tuple(grid)
-        self.real, self.method, self.impl = real, method, impl
+        self.method, self.impl = method, impl
         self.chunks, self.tuner_cache = chunks, tuner_cache
         self.comm_dtype = canonical_comm_dtype(comm_dtype)
         self.d, self.k = d, k
@@ -121,32 +164,57 @@ class ParallelFFT:
             divisors[j] = math.lcm(divisors[j], sizes[j])  # initial placement
         for j in range(1, k + 1):
             divisors[j] = math.lcm(divisors[j], sizes[j - 1])  # gained at exchange
+        # subgroup an axis is split over *after* its own transform (the one
+        # the spectral extent must stay divisible by)
+        future_div = [sizes[j - 1] if 1 <= j <= k else 1 for j in range(d)]
 
         placement: list[Group | None] = [grid[i] if i < k else None for i in range(d)]
         self.input_pencil = make_pencil(mesh, self.shape, tuple(placement), divisors=tuple(divisors))
         self._divisors = tuple(divisors)
 
-        # Forward schedule + pencil trace.
+        # input/spectral dtypes: real input iff the first applied transform
+        # that produces complex output is r2c (or no axis ever goes complex)
+        first_complex = next((specs[a].kind for a in range(d - 1, -1, -1)
+                              if not specs[a].real_to_real), None)
+        in_real = first_complex in (None, "r2c")
+        out_real = first_complex is None
+
+        # Forward schedule + pencil/dtype trace.  pencil_trace[i] /
+        # dtype_trace[i] describe the block *before* stages[i].
         stages: list[Stage] = []
         pencils: list[Pencil] = [self.input_pencil]
+        dtypes: list = [jnp.float32 if in_real else jnp.complex64]
         cur = self.input_pencil
-        for axis in range(d - 1, k - 1, -1):  # trailing local axes
-            kind = "r2c" if (real and axis == d - 1) else None
-            stages.append(FFTStage(axis, kind, self.shape[axis]))
-            if kind == "r2c":
-                cur = cur.with_axis_extent(axis, self.shape[axis] // 2 + 1)
-                # honour the axis's future divisibility requirement
-                cur = _repad(cur, axis, divisors[axis])
+        cur_dt = dtypes[0]
+
+        def push_fft(axis: int):
+            nonlocal cur, cur_dt
+            sp = specs[axis]
+            n = self.shape[axis]
+            stages.append(FFTStage(axis, sp, n))
+            ext = sp.spectral_extent(n)
+            if ext != cur.logical[axis]:
+                cur = cur.with_axis_extent(axis, ext)
+                cur = _repad(cur, axis, future_div[axis])
+            if not sp.real_to_real:
+                cur_dt = jnp.complex64
             pencils.append(cur)
+            dtypes.append(cur_dt)
+
+        for axis in range(d - 1, k - 1, -1):  # trailing local axes
+            push_fft(axis)
         for i in range(k - 1, -1, -1):
             stages.append(ExchangeStage(v=i + 1, w=i, group=grid[i]))
             cur = cur.exchanged(i + 1, i)
             pencils.append(cur)
-            stages.append(FFTStage(i, None, cur.logical[i]))
-            pencils.append(cur)
+            dtypes.append(cur_dt)
+            push_fft(i)
         self.stages = tuple(stages)
         self.pencil_trace = tuple(pencils)
+        self.dtype_trace = tuple(dtypes)
         self.output_pencil = cur
+        self.input_dtype = dtypes[0]
+        self.spectral_dtype = jnp.float32 if out_real else jnp.complex64
 
     # -- schedule ------------------------------------------------------------
 
@@ -200,39 +268,49 @@ class ParallelFFT:
 
     def forward(self, x: jax.Array) -> jax.Array:
         """Logical-shape convenience wrapper (pads, transforms, unpads)."""
-        x = x.astype(jnp.float32 if self.real else jnp.complex64)
+        x = x.astype(self.input_dtype)
         y = self.forward_padded(pad_global(x, self.input_pencil))
         return unpad_global(y, self.output_pencil)
 
     def backward(self, x: jax.Array) -> jax.Array:
-        y = self.backward_padded(pad_global(x.astype(jnp.complex64), self.output_pencil))
+        y = self.backward_padded(pad_global(x.astype(self.spectral_dtype), self.output_pencil))
         return unpad_global(y, self.input_pencil)
 
     # -- analysis -----------------------------------------------------------
 
     def model_flops(self) -> float:
-        """5 N log2 N per 1-D complex transform, summed over the plan
-        (the classic FFT nominal-flops convention; r2c counted as half)."""
-        return sum(self._stage_flops(st) for st in self.stages
+        """5 N log2 N per 1-D transform, summed over the plan (the classic
+        FFT nominal-flops convention; stages transforming real data — r2c
+        and dct/dst on a still-real block — counted as half)."""
+        return sum(self._stage_flops_at(i) for i, st in enumerate(self.stages)
                    if isinstance(st, FFTStage))
 
-    def _stage_flops(self, st: FFTStage) -> float:
-        """Nominal flops of one FFT stage at its true logical length:
-        5 n log2 n per transform × the batch of other axes' logical extents
-        at that point of the plan (the last axis is Hermitian-reduced to
-        N/2+1 for every stage after the r2c one)."""
-        n = st.logical_n
+    def _stage_flops_at(self, i: int, stages=None, pencils=None, dtypes=None) -> float:
+        """Nominal flops of FFT stage ``i`` of a plan walk: 5 n log2 n per
+        transform × the batch of the other axes' *current* logical extents
+        (read off the pencil trace, so pruned/Hermitian-reduced axes count
+        at their truncated extent once truncated)."""
+        stages = stages if stages is not None else self.stages
+        pencils = pencils if pencils is not None else self.pencil_trace
+        dtypes = dtypes if dtypes is not None else self.dtype_trace
+        st = stages[i]
+        before = pencils[i]
+        n = st.n
         batch = 1.0
-        for ax, ext in enumerate(self.shape):
+        for ax, ext in enumerate(before.logical):
             if ax != st.axis:
-                batch *= ext if ax != self.d - 1 or not self.real else (ext // 2 + 1)
+                batch *= ext
         flops = 5.0 * n * math.log2(max(n, 2)) * batch
-        if st.real:
-            flops *= 0.5
+        if st.spec.kind == "r2c" or dtypes[i] == jnp.float32:
+            flops *= 0.5  # transform of real data
         return flops
 
+    def _stage_itemsize(self, i: int, dtypes=None) -> int:
+        dtypes = dtypes if dtypes is not None else self.dtype_trace
+        return 8 if dtypes[i] == jnp.complex64 else 4
+
     def comm_bytes_per_device(
-        self, itemsize: int = 8, *, method: str | None = None,
+        self, itemsize: int | None = None, *, method: str | None = None,
         comm_dtype: str | None = None,
     ) -> int:
         """Wire bytes each device sends across all exchanges (roofline
@@ -242,8 +320,9 @@ class ParallelFFT:
         ``comm_dtype`` to price a hypothetical uniform payload).  The
         element count is method-independent; ``method`` adds the
         materialized local-copy traffic the engine pays on top
-        (traditional: pack+unpack; pipelined: slice concat; fused:
-        none)."""
+        (traditional: pack+unpack; pipelined: slice concat; fused: none).
+        ``itemsize=None`` prices each stage at its traced dtype width
+        (complex64 exchanges at 8, still-real f32 exchanges at 4)."""
         from repro.core.redistribute import exchange_local_copy_elems, exchange_wire_bytes
 
         if comm_dtype is None:
@@ -256,54 +335,66 @@ class ParallelFFT:
         else:
             dtypes = [canonical_comm_dtype(comm_dtype)] * self.n_exchanges
         total, ex_i = 0, 0
-        cur = self.input_pencil
-        for st, pen in zip(self.stages, self.pencil_trace[1:]):
+        for i, st in enumerate(self.stages):
             if isinstance(st, ExchangeStage):
-                total += exchange_wire_bytes(cur, st.v, st.w, itemsize=itemsize,
-                                             comm_dtype=dtypes[ex_i])
+                isz = itemsize if itemsize is not None else self._stage_itemsize(i)
+                total += exchange_wire_bytes(self.pencil_trace[i], st.v, st.w,
+                                             itemsize=isz, comm_dtype=dtypes[ex_i])
                 ex_i += 1
                 if method is not None:
-                    total += exchange_local_copy_elems(cur, st.v, st.w, method=method) * itemsize
-            cur = pen
+                    total += exchange_local_copy_elems(
+                        self.pencil_trace[i], st.v, st.w, method=method) * isz
         return total
 
     def model_time_s(
         self,
         *,
-        itemsize: int = 8,
+        itemsize: int | None = None,
         peak_flops: float = 197e12,
         ici_bw: float = 50e9,
         hbm_bw: float = 819e9,
         schedule: Schedule | None = None,
+        direction: str = "forward",
     ) -> float:
-        """Overlap-aware modeled wall time of one forward transform: FFT
-        stages at ``peak_flops``; each exchange via
+        """Overlap-aware modeled wall time of one transform: FFT stages at
+        ``peak_flops``; each exchange via
         :func:`repro.core.redistribute.exchange_time_model`, which credits a
-        pipelined exchange with hiding the following stage's FFT compute."""
+        pipelined exchange with hiding the following stage's FFT compute.
+        ``direction="backward"`` walks the reversed plan (whose per-stage
+        logical extents and overlap pairings differ for pruned/r2c axes);
+        ``itemsize=None`` prices each exchange at its traced dtype width."""
         from repro.core.redistribute import exchange_time_model
 
         schedule = schedule if schedule is not None else self.schedule
+        if direction == "forward":
+            stages, pencils, dtypes = self.stages, self.pencil_trace, self.dtype_trace
+        elif direction == "backward":
+            stages, pencils = _reverse_plan(self.stages, self.pencil_trace)
+            dtypes = self.dtype_trace[::-1]
+            schedule = schedule[::-1]
+        else:
+            raise ValueError(f"unknown direction {direction!r}")
         ndev = group_size(self.mesh, tuple(n for g in self.grid for n in
                                            ((g,) if isinstance(g, str) else g)))
         total, ex_i, i = 0.0, 0, 0
-        stages = self.stages
         while i < len(stages):
             st = stages[i]
             if isinstance(st, ExchangeStage):
                 method, chunks, comm_dtype = schedule[ex_i]
                 ex_i += 1
-                src_pen = self.pencil_trace[i]  # state before this exchange
+                src_pen = pencils[i]  # state before this exchange
+                isz = itemsize if itemsize is not None else self._stage_itemsize(i, dtypes)
                 nxt = stages[i + 1] if i + 1 < len(stages) else None
                 fft_s = 0.0
                 if isinstance(nxt, FFTStage) and nxt.axis == st.w:
-                    fft_s = self._stage_flops(nxt) / ndev / peak_flops
+                    fft_s = self._stage_flops_at(i + 1, stages, pencils, dtypes) / ndev / peak_flops
                     i += 1  # folded into the exchange term
                 total += exchange_time_model(
-                    src_pen, st.v, st.w, itemsize=itemsize, method=method,
+                    src_pen, st.v, st.w, itemsize=isz, method=method,
                     chunks=chunks, comm_dtype=comm_dtype, ici_bw=ici_bw,
                     hbm_bw=hbm_bw, overlap_compute_s=fft_s)
             else:
-                total += self._stage_flops(st) / ndev / peak_flops
+                total += self._stage_flops_at(i, stages, pencils, dtypes) / ndev / peak_flops
             i += 1
         return total
 
@@ -320,18 +411,19 @@ def _repad(pencil: Pencil, axis: int, divisor: int) -> Pencil:
 
 
 def _reverse_plan(stages, pencils):
-    """Backward schedule: reverse stage order; exchanges swap v/w; r2c→c2r."""
+    """Backward schedule: reverse stage order; exchanges swap v/w; each FFT
+    stage keeps its spec — the BACKWARD sign selects the inverse transform
+    (ifft, c2r, DCT/DST inverse, pruned zero-scatter)."""
     rev_stages: list[Stage] = []
     rev_pencils: list[Pencil] = [pencils[-1]]
     # pencils[i] is the state *before* stages[i]; build reversed trace.
     for idx in range(len(stages) - 1, -1, -1):
         st = stages[idx]
-        before, after = pencils[idx], pencils[idx + 1]
+        before = pencils[idx]
         if isinstance(st, ExchangeStage):
             rev_stages.append(ExchangeStage(v=st.w, w=st.v, group=st.group))
         else:
-            kind = "c2r" if st.real == "r2c" else None
-            rev_stages.append(FFTStage(st.axis, kind, st.logical_n))
+            rev_stages.append(st)
         rev_pencils.append(before)
     return tuple(rev_stages), tuple(rev_pencils)
 
@@ -387,8 +479,12 @@ def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
 
 
 def _fft_padded_axis(block, st: FFTStage, cur: Pencil, nxt: Pencil, *, impl, sign):
-    """1-D transform along a locally-complete axis, honouring padding: slice
-    to the logical extent, transform at the true length, re-pad."""
+    """One transform stage along a locally-complete axis, honouring padding:
+    slice to the logical extent, transform at the true length (pruning
+    gather/scatter folded in by :func:`fftcore.local_transform`), re-pad.
+    Because the slice/pad bracket the transform inside the shard function,
+    XLA fuses them with the adjacent exchange's unpack — dealiasing rides
+    the existing exchange path instead of costing separate HBM passes."""
     axis = st.axis
     n_log_in = cur.logical[axis]
     if block.shape[axis] != cur.physical[axis]:
@@ -397,10 +493,7 @@ def _fft_padded_axis(block, st: FFTStage, cur: Pencil, nxt: Pencil, *, impl, sig
         )
     if n_log_in != block.shape[axis]:
         block = jax.lax.slice_in_dim(block, 0, n_log_in, axis=axis)
-    if st.real == "c2r":
-        block = fftcore.local_fft(block, axis, sign, impl=impl, real="c2r", n=st.logical_n)
-    else:
-        block = fftcore.local_fft(block, axis, sign, impl=impl, real=st.real)
+    block = fftcore.local_transform(block, axis, sign, st.spec, n=st.n, impl=impl)
     n_phys_out = nxt.physical[axis]
     if block.shape[axis] != n_phys_out:
         pads = [(0, 0)] * block.ndim

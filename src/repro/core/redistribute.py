@@ -70,7 +70,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh
 
 from repro.core import quant
 from repro.core.decomp import local_lengths

@@ -19,13 +19,14 @@ This module micro-benchmarks each candidate on the stage's real shapes (the
 exchange plus the 1-D FFT it feeds, so overlap is priced in) and caches the
 winning schedule on disk.
 
-Cache schema v2: each entry maps a :func:`plan_key` — mesh shape, global
-shape, grid, dtype, real, impl, backend *and device kind* (so timings from
-different TPU generations under the same ``backend`` string never collide),
-the candidate set, and ``schema: 2`` — to ``{"schedule": [[method, chunks,
-comm_dtype], ...], "timings": {...}}``.  v1 entries (2-field schedules, no
-schema tag) have incompatible keys and are simply never matched; stale
-entries are harmless.  Writes are atomic (temp file + ``os.replace``) so
+Cache schema v3: each entry maps a :func:`plan_key` — mesh shape, global
+shape, grid, the per-axis transform tags (so a dealiased/pruned or DCT plan
+never collides with the plain c2c plan of the same shape), impl, backend
+*and device kind* (so timings from different TPU generations under the same
+``backend`` string never collide), the candidate set, and ``schema: 3`` —
+to ``{"schedule": [[method, chunks, comm_dtype], ...], "timings": {...}}``.
+v1/v2 entries (no transforms field / older schema tags) have incompatible
+keys and are simply never matched; stale entries are harmless.  Writes are atomic (temp file + ``os.replace``) so
 concurrent benchmark workers sharing a cache cannot interleave partial
 JSON.
 
@@ -49,7 +50,7 @@ from repro.core.quant import canonical_comm_dtype
 from repro.core.redistribute import PIPELINE_CHUNK_CANDIDATES, exchange_shard
 
 #: cache schema version (bump when the key or entry layout changes)
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: (method, chunks) engine candidates benchmarked per exchange stage
 ENGINE_CANDIDATES: tuple[tuple[str, int], ...] = (
@@ -95,13 +96,13 @@ def _key_fields(plan) -> dict:
     """Everything that determines the stage shapes and the hardware the
     timings are valid for (the candidate-set-independent part of the key)."""
     mesh_sig = tuple(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
-    dtype = "float32->complex64" if plan.real else "complex64"
     try:
         device_kind = jax.devices()[0].device_kind
     except Exception:  # no devices (analysis-only contexts)
         device_kind = "unknown"
     return {"schema": SCHEMA_VERSION, "mesh": mesh_sig, "shape": plan.shape,
-            "grid": plan.grid, "dtype": dtype, "real": plan.real,
+            "grid": plan.grid,
+            "transforms": tuple(sp.tag() for sp in plan.transforms),
             "impl": plan.impl, "backend": jax.default_backend(),
             "device_kind": device_kind}
 
@@ -232,7 +233,10 @@ def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str, *,
 
     fn = jax.jit(shard_map(run, mesh=plan.mesh, in_specs=before.spec,
                            out_specs=out_pen.spec, check_vma=False))
-    x = jax.device_put(jnp.zeros(before.physical, jnp.complex64), before.sharding)
+    # time at the stage's true dtype: exchanges before any complex-producing
+    # transform (all-real DCT/DST plans) ship f32, not complex64
+    x = jax.device_put(jnp.zeros(before.physical, plan.dtype_trace[si]),
+                       before.sharding)
     jax.block_until_ready(fn(x))  # compile + warm
     best = float("inf")
     for _ in range(repeats):

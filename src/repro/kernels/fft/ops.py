@@ -102,6 +102,39 @@ def irfft_matmul(
     return _from_last(jnp.real(y), axis)
 
 
+@functools.partial(jax.jit, static_argnames=("axis", "trig_type"))
+def dct_matmul(x: jax.Array, *, axis: int = -1, trig_type: int = 2) -> jax.Array:
+    """Unnormalized DCT-II/III along ``axis`` as one transform-matrix matmul.
+
+    The MXU path for trigonometric axes: unlike the DFT there is no
+    four-step factorization with real twiddles, so the whole (n, n) cosine
+    matrix is applied in a single f32 matmul (HIGHEST precision — the MXU
+    runs it as 3-pass bf16 passes, which keeps ~f32 accuracy).  Complex
+    blocks transform re/im independently (the DCT is real-to-real).
+    """
+    return _trig_matmul(x, axis, ref.dct_matrix(x.shape[axis % x.ndim], trig_type))
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "trig_type"))
+def dst_matmul(x: jax.Array, *, axis: int = -1, trig_type: int = 2) -> jax.Array:
+    """Unnormalized DST-II/III along ``axis`` (see :func:`dct_matmul`)."""
+    return _trig_matmul(x, axis, ref.dst_matrix(x.shape[axis % x.ndim], trig_type))
+
+
+def _trig_matmul(x, axis, mat):
+    m = jnp.asarray(mat)
+    axis = axis % x.ndim
+
+    def apply(real_block):
+        y = jnp.moveaxis(real_block.astype(jnp.float32), axis, -1)
+        y = jnp.matmul(y, m.T, precision=jax.lax.Precision.HIGHEST)
+        return jnp.moveaxis(y, -1, axis)
+
+    if jnp.iscomplexobj(x):
+        return jax.lax.complex(apply(jnp.real(x)), apply(jnp.imag(x)))
+    return apply(x).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
 
 

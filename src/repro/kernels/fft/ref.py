@@ -29,6 +29,44 @@ def twiddle_matrix(n1: int, n2: int, dtype=np.complex64) -> np.ndarray:
     return np.exp(-2j * np.pi * np.outer(k1, n2i) / (n1 * n2)).astype(dtype)
 
 
+def dct_matrix(n: int, trig_type: int = 2, dtype=np.float32) -> np.ndarray:
+    """Unnormalized (scipy-convention) DCT transform matrix: y = M @ x.
+
+    Type II: M[k, j] = 2 cos(pi k (2j+1) / (2n)).
+    Type III: M[k, 0] = 1, M[k, j>0] = 2 cos(pi j (2k+1) / (2n)).
+    The two are mutual inverses up to 1/(2n): C3 @ C2 = 2n I.
+    """
+    k = np.arange(n)[:, None]
+    j = np.arange(n)[None, :]
+    if trig_type == 2:
+        m = 2.0 * np.cos(np.pi * k * (2 * j + 1) / (2 * n))
+    elif trig_type == 3:
+        m = 2.0 * np.cos(np.pi * j * (2 * k + 1) / (2 * n))
+        m[:, 0] = 1.0
+    else:
+        raise ValueError(f"dct type must be 2 or 3, got {trig_type}")
+    return m.astype(dtype)
+
+
+def dst_matrix(n: int, trig_type: int = 2, dtype=np.float32) -> np.ndarray:
+    """Unnormalized (scipy-convention) DST transform matrix: y = M @ x.
+
+    Type II: M[k, j] = 2 sin(pi (k+1) (2j+1) / (2n)).
+    Type III: M[k, j<n-1] = 2 sin(pi (j+1) (2k+1) / (2n)),
+              M[k, n-1] = (-1)^k.  S3 @ S2 = 2n I.
+    """
+    k = np.arange(n)[:, None]
+    j = np.arange(n)[None, :]
+    if trig_type == 2:
+        m = 2.0 * np.sin(np.pi * (k + 1) * (2 * j + 1) / (2 * n))
+    elif trig_type == 3:
+        m = 2.0 * np.sin(np.pi * (j + 1) * (2 * k + 1) / (2 * n))
+        m[:, n - 1] = (-1.0) ** k[:, 0]
+    else:
+        raise ValueError(f"dst type must be 2 or 3, got {trig_type}")
+    return m.astype(dtype)
+
+
 def fourstep_ref(x: jnp.ndarray, n1: int, n2: int) -> jnp.ndarray:
     """Four-step DFT along the last axis (length n1*n2) in plain jnp.
 

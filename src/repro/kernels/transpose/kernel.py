@@ -10,7 +10,6 @@ passes instead of a strided gather.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

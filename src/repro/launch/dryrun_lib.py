@@ -5,12 +5,7 @@ tests import this module directly so the flag never leaks into their
 process.
 """
 
-import argparse
-import json
 import re
-import sys
-import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -18,11 +13,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.launch.mesh import make_production_mesh
-from repro.models.config import active_param_count, param_count
-from repro.models.lm import LM
 from repro.models.sharding import Axes
-from repro.optim import AdamW, OptState
 
 DEFAULT_OUT = "benchmarks/artifacts/dryrun"
 

@@ -33,7 +33,6 @@ Known approximations (documented in EXPERIMENTS.md §Roofline):
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

@@ -22,12 +22,10 @@ Entry points (all pure, all jit-able):
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

@@ -16,7 +16,6 @@ TP: d_inner (and Mamba2 heads) shard over the model axis; states inherit it.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

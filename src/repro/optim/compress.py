@@ -23,12 +23,10 @@ single shared implementation in :mod:`repro.core.quant` (also the
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.meshutil import axis_size as _axis_size
 from repro.core.quant import dequantize_int8 as _dequant, quantize_int8

@@ -1,8 +1,5 @@
 """Checkpoint store: atomicity, integrity, async, elastic re-shard."""
 
-import json
-import shutil
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

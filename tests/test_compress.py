@@ -1,7 +1,6 @@
 """Int8 gradient compression: quantization error bounds, error feedback,
 multi-device compressed psum == exact psum (to quantization tolerance)."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from _hyp import given, settings, strategies as st

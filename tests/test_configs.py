@@ -1,6 +1,5 @@
 """Exactness of the 10 assigned architecture configs (deliverable f)."""
 
-import pytest
 
 from repro import configs
 

@@ -1,7 +1,5 @@
 """Data pipeline: determinism, shard partition, learnable structure."""
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 from _hyp import given, settings, strategies as st
 

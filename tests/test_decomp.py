@@ -1,6 +1,5 @@
 """Property tests for the paper's Alg. 1 (balanced block decomposition)."""
 
-import math
 
 import pytest
 from _hyp import given, settings, strategies as st

@@ -1,8 +1,5 @@
 """Unit tests for dry-run plumbing that don't need 512 devices."""
 
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 
 def _collective_bytes(text):

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.meshutil import make_mesh, set_mesh
 from repro.models.config import MoEConfig
-from repro.models.moe import moe_apply_a2a, moe_apply_local, moe_init, route
+from repro.models.moe import moe_apply_a2a, moe_init, route
 
 
 def dense_moe_oracle(p, x, cfg, mlp_kind="swiglu"):

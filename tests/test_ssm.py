@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.models.config import SSMConfig
-from repro.models.ssm import (causal_conv, causal_conv_step, conv_tail,
-                              mamba1_apply, mamba1_init, mamba2_apply,
-                              mamba2_init, selective_scan, ssd_scan)
+from repro.models.ssm import (causal_conv, causal_conv_step, mamba1_apply,
+                              mamba1_init, mamba2_apply, mamba2_init,
+                              selective_scan, ssd_scan)
 
 
 def naive_selective_scan(x, dt, A, Bm, Cm):

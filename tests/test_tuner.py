@@ -1,5 +1,5 @@
 """Exchange-schedule autotuner: candidate sweep (engines × comm_dtype
-payloads), schema-v2 disk cache round-trip, atomic writes."""
+payloads), schema-v3 disk cache round-trip, atomic writes."""
 
 import json
 import threading
