@@ -11,6 +11,15 @@ int8} on the same problem and reports one JSON table with a ``comm_dtype``
 column per row (pass ``--tune-cache`` so the auto schedules round-trip to
 disk).
 
+``--fields N`` (N > 1) benchmarks the batched multi-field path: every
+timed transform runs N stacked fields through one plan invocation, the
+``--compare`` sweep grows a ``batch_fusion`` dimension ({stacked,
+pipelined-across-fields, per-field} per method×payload row), and the
+report gains an ``"exchange"`` section timing the exchanges-only plan
+batched (one all-to-all per stage for all N fields) vs as a per-field
+loop (N all-to-alls per stage) — the message-aggregation win in
+isolation.
+
 Run via benchmarks.paperfigs which sets XLA_FLAGS for the device count.
 """
 
@@ -26,7 +35,8 @@ import numpy as np
 
 
 def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
-               comm_dtype=None, tuner_cache=None, transforms=None):
+               comm_dtype=None, tuner_cache=None, transforms=None,
+               batch_fusion="stacked"):
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ParallelFFT
 
@@ -55,15 +65,22 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
     if transforms:
         return ParallelFFT(mesh, shape, grid, transforms=transforms,
                            method=method, impl=impl, chunks=chunks,
-                           comm_dtype=comm_dtype, tuner_cache=tuner_cache)
+                           comm_dtype=comm_dtype, tuner_cache=tuner_cache,
+                           batch_fusion=batch_fusion)
     return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl,
                        chunks=chunks, comm_dtype=comm_dtype,
-                       tuner_cache=tuner_cache)
+                       tuner_cache=tuner_cache, batch_fusion=batch_fusion)
 
 
-def exchanges_only(plan):
+def exchanges_only(plan, *, nfields=1, batch_fusion="stacked"):
     """A jit'd function running only the plan's exchange stages (paper's
-    'global redistribution' timing split)."""
+    'global redistribution' timing split).
+
+    ``nfields > 1`` runs the stages on a stacked ``(nfields, …)`` block:
+    ``batch_fusion="stacked"`` ships all fields in one all-to-all per
+    stage, ``"per-field"`` issues the N per-field collectives a loop over
+    single-field plans would — the pair isolates the message-aggregation
+    win of the batched path."""
     from repro.core.meshutil import shard_map
     from repro.core.pfft import ExchangeStage
     from repro.core.redistribute import exchange_shard
@@ -74,24 +91,34 @@ def exchanges_only(plan):
               if isinstance(s, ExchangeStage)]
 
     schedule = plan.schedule  # resolves "auto" to the tuned per-stage mix
+    nbatch = 1 if nfields > 1 else 0
 
     def run(block):
         for ex_i, (st, before, after, dtype) in enumerate(stages):
             # emulate the fft-stage shape *and dtype* change between
             # exchanges (an r2c mid-plan means later exchanges carry
             # complex64 while earlier ones carried f32)
-            if (block.shape != tuple(np.array(before.local_shape))
-                    or block.dtype != dtype):
-                block = jnp.zeros(before.local_shape, dtype)
+            want = (nfields,) * nbatch + tuple(np.array(before.local_shape))
+            if block.shape != want or block.dtype != dtype:
+                block = jnp.zeros(want, dtype)
             method, chunks, comm_dtype = schedule[ex_i]
-            block = exchange_shard(block, st.v, st.w, st.group,
+            if nbatch and batch_fusion != "stacked":
+                # per-field and pipelined-across-fields both issue N
+                # per-field collectives here (no FFTs to interleave with)
+                block = jnp.stack([
+                    exchange_shard(block[f], st.v, st.w, st.group,
                                    method=method, chunks=chunks,
                                    comm_dtype=comm_dtype)
+                    for f in range(nfields)])
+            else:
+                block = exchange_shard(block, st.v, st.w, st.group,
+                                       method=method, chunks=chunks,
+                                       comm_dtype=comm_dtype, nbatch=nbatch)
         return block
 
     first, first_dtype = stages[0][1], stages[0][3]
-    fn = shard_map(run, mesh=plan.mesh, in_specs=first.spec,
-                   out_specs=stages[-1][2].spec, check_vma=False)
+    fn = shard_map(run, mesh=plan.mesh, in_specs=first.batched_spec(nbatch),
+                   out_specs=stages[-1][2].batched_spec(nbatch), check_vma=False)
     return jax.jit(fn), first, first_dtype
 
 
@@ -112,25 +139,59 @@ def _best_of(once, xg, *, outer, inner):
     return best
 
 
-def _make_input(plan, shape):
+def _make_input(plan, shape, nfields=1):
     """Random logical input at the plan's true input dtype (real for r2c
-    and all-real dct/dst transform plans, complex otherwise)."""
+    and all-real dct/dst transform plans, complex otherwise); ``nfields``
+    stacks N fields along a leading batch axis."""
     rng = np.random.default_rng(0)
-    x = rng.standard_normal(shape).astype(np.float32)
+    full = ((nfields,) if nfields > 1 else ()) + tuple(shape)
+    x = rng.standard_normal(full).astype(np.float32)
     if plan.input_dtype == jnp.complex64:
-        x = (x + 1j * rng.standard_normal(shape)).astype(np.complex64)
+        x = (x + 1j * rng.standard_normal(full)).astype(np.complex64)
     return x
 
 
 def _time_plan(plan, shape, args):
-    """Time one forward+backward round trip of ``plan`` (total measure)."""
-    x = _make_input(plan, shape)
+    """Time one forward+backward round trip of ``plan`` (total measure),
+    batched over ``--fields`` stacked fields when N > 1."""
+    nf = args.fields
+    x = _make_input(plan, shape, nf)
     from repro.core.pencil import pad_global
 
-    xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
-                        plan.input_pencil.sharding)
-    fwd, bwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
+    if nf > 1:
+        xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil, nbatch=1),
+                            plan.input_pencil.batched_sharding())
+        fwd = jax.jit(plan.forward_many_padded(nf))
+        bwd = jax.jit(plan.backward_many_padded(nf))
+    else:
+        xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
+                            plan.input_pencil.sharding)
+        fwd, bwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
     return _best_of(lambda v: bwd(fwd(v)), xg, outer=args.outer, inner=args.inner)
+
+
+def _rand_block(shape, dtype):
+    """Random buffer for exchange timings, complex when the stage is."""
+    rng = np.random.default_rng(0)
+    buf = rng.standard_normal(shape).astype(np.float32)
+    if dtype == jnp.complex64:
+        buf = (buf + 1j * rng.standard_normal(shape)).astype(np.complex64)
+    return jnp.asarray(buf)
+
+
+def _exchange_comparison(plan, args):
+    """Time the exchanges-only plan over N stacked fields, batched (one
+    collective per stage) vs as a per-field loop (N per stage): the
+    message-aggregation win in isolation."""
+    out = {}
+    for fusion in ("stacked", "per-field"):
+        fn, first, first_dtype = exchanges_only(plan, nfields=args.fields,
+                                                batch_fusion=fusion)
+        xg = jax.device_put(_rand_block((args.fields, *first.physical), first_dtype),
+                            first.batched_sharding())
+        out[fusion.replace("-", "_") + "_s"] = _best_of(
+            fn, xg, outer=args.outer, inner=args.inner)
+    return out
 
 
 def main(argv=None):
@@ -147,6 +208,13 @@ def main(argv=None):
                     help="exchange wire payload (auto: accuracy budget)")
     ap.add_argument("--comm-dtypes", type=str, default="complex64,bf16,int8",
                     help="comma list of payloads the --compare sweep covers")
+    ap.add_argument("--fields", type=int, default=1,
+                    help="number of stacked fields per transform (N>1 "
+                         "benchmarks the batched multi-field path)")
+    ap.add_argument("--batch-fusion", default="stacked",
+                    choices=["stacked", "pipelined-across-fields", "per-field"],
+                    help="multi-field execution mode for single-method runs "
+                         "(--compare sweeps all three)")
     ap.add_argument("--compare", action="store_true",
                     help="time all four methods x all --comm-dtypes payloads "
                          "and report one table")
@@ -170,67 +238,82 @@ def main(argv=None):
     if args.compare:
         out = {"shape": shape, "grid": args.grid, "real": bool(args.real),
                "transforms": list(transforms) if transforms else None,
-               "ndev": ndev, "methods": {}}
+               "ndev": ndev, "fields": args.fields, "methods": {}}
+        fusions = (["stacked", "pipelined-across-fields", "per-field"]
+                   if args.fields > 1 else ["stacked"])
         for method in METHODS:
             for comm_dtype in args.comm_dtypes.split(","):
-                plan = build_plan(shape, args.grid, ndev, real=args.real,
-                                  method=method, impl=args.impl,
-                                  chunks=args.chunks, comm_dtype=comm_dtype,
-                                  tuner_cache=args.tune_cache,
-                                  transforms=transforms)
-                if not out["methods"]:
-                    # the workload's true input kind, once from the first
-                    # plan (a --transforms plan can be real without --real)
-                    out["real"] = bool(plan.input_dtype == jnp.float32)
-                out["methods"][f"{method}@{comm_dtype}"] = {
-                    "comm_dtype": comm_dtype,
-                    "best_s": _time_plan(plan, shape, args),
-                    "schedule": [list(s) for s in plan.schedule],
-                    # itemsize=None prices each exchange at its traced
-                    # dtype width (complex64 after the r2c stage, f32 for
-                    # exchanges of still-real dct/dst data)
-                    "model_time_s": plan.model_time_s(itemsize=None),
-                    "wire_bytes_per_dev": plan.comm_bytes_per_device(None),
-                }
+                for fusion in fusions:
+                    plan = build_plan(shape, args.grid, ndev, real=args.real,
+                                      method=method, impl=args.impl,
+                                      chunks=args.chunks, comm_dtype=comm_dtype,
+                                      tuner_cache=args.tune_cache,
+                                      transforms=transforms, batch_fusion=fusion)
+                    if not out["methods"]:
+                        # the workload's true input kind, once from the first
+                        # plan (a --transforms plan can be real without --real)
+                        out["real"] = bool(plan.input_dtype == jnp.float32)
+                    sched = (plan.batched_schedule(args.fields)
+                             if args.fields > 1 else plan.schedule)
+                    tag = (f"{method}@{comm_dtype}@{fusion}"
+                           if args.fields > 1 else f"{method}@{comm_dtype}")
+                    out["methods"][tag] = {
+                        "comm_dtype": comm_dtype,
+                        "batch_fusion": fusion if args.fields > 1 else None,
+                        "best_s": _time_plan(plan, shape, args),
+                        "schedule": [list(s) for s in sched],
+                        # itemsize=None prices each exchange at its traced
+                        # dtype width (complex64 after the r2c stage, f32 for
+                        # exchanges of still-real dct/dst data)
+                        "model_time_s": plan.model_time_s(
+                            itemsize=None, nfields=args.fields),
+                        "wire_bytes_per_dev": plan.comm_bytes_per_device(
+                            None, nfields=args.fields),
+                    }
+                    if args.fields > 1 and method == "auto":
+                        # one fusion pass suffices: auto tunes batch_fusion
+                        # per stage itself, so the plan's own mode is moot
+                        break
+        if args.fields > 1:
+            plan = build_plan(shape, args.grid, ndev, real=args.real,
+                              method="fused", impl=args.impl,
+                              transforms=transforms)
+            out["exchange"] = {"fields": args.fields,
+                               **_exchange_comparison(plan, args)}
         print(json.dumps(out))
         return
     plan = build_plan(shape, args.grid, ndev, real=args.real,
                       method=args.method, impl=args.impl, chunks=args.chunks,
                       comm_dtype=args.comm_dtype, tuner_cache=args.tune_cache,
-                      transforms=transforms)
-
-    x = _make_input(plan, shape)
-    from repro.core.pencil import pad_global
-
-    xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
-                        plan.input_pencil.sharding)
+                      transforms=transforms, batch_fusion=args.batch_fusion)
+    nf = args.fields
 
     if args.measure == "redistribution":
-        rng = np.random.default_rng(0)
-        fn, first, first_dtype = exchanges_only(plan)
-        buf = rng.standard_normal(first.physical).astype(np.float32)
-        if first_dtype == jnp.complex64:
-            buf = (buf + 1j * rng.standard_normal(first.physical)).astype(np.complex64)
-        xg = jax.device_put(jnp.asarray(buf), first.sharding)
+        fusion = args.batch_fusion if nf > 1 else "stacked"
+        fn, first, first_dtype = exchanges_only(plan, nfields=nf,
+                                                batch_fusion=fusion)
+        nbatch = 1 if nf > 1 else 0
+        xg = jax.device_put(
+            _rand_block((nf,) * nbatch + tuple(first.physical), first_dtype),
+            first.batched_sharding(nbatch))
 
         def once(v):
             return fn(v)
+
+        best = _best_of(once, xg, outer=args.outer, inner=args.inner)
     else:
-        fwd, bwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
-
-        def once(v):
-            return bwd(fwd(v))
-
-    best = _best_of(once, xg, outer=args.outer, inner=args.inner)
+        best = _time_plan(plan, shape, args)
     print(json.dumps({
         "shape": shape, "grid": args.grid, "method": args.method,
         "comm_dtype": plan.comm_dtype,
+        "fields": nf,
+        "batch_fusion": args.batch_fusion if nf > 1 else None,
         "real": bool(plan.input_dtype == jnp.float32),
         "ndev": ndev, "measure": args.measure,
         "transforms": [sp.tag() for sp in plan.transforms],
         "best_s": best,
-        "comm_bytes_per_dev": plan.comm_bytes_per_device(None),
-        "model_flops": plan.model_flops(),
+        "comm_bytes_per_dev": plan.comm_bytes_per_device(None, nfields=nf),
+        "model_flops": plan.model_flops(nfields=nf),
     }))
 
 

@@ -1,17 +1,26 @@
-"""Normalize a ``fftbench --compare`` JSON blob into a flat BENCH record.
+"""Normalize ``fftbench --compare`` JSON blobs into flat BENCH records.
 
 The perf trajectory across PRs needs comparable data points; the raw
---compare output nests per-(method, comm_dtype) rows with schedules and
-model terms.  This script reduces it to the stable schema
+--compare output nests per-(method, comm_dtype[, batch_fusion]) rows with
+schedules and model terms.  This script reduces each blob to the stable
+schema
 
     {"schema": "bench-v1", "pr": N, "shape": [...], "grid": "...",
-     "ndev": N, "real": bool,
+     "ndev": N, "real": bool, "fields": N,
      "methods": {"fused@complex64": {"best_s": ..., "model_time_s": ...,
                  "wire_bytes_per_dev": ...}, ...},
+     "exchange": {"fields": N, "stacked_s": ..., "per_field_s": ...},
      "best": {"method": "...", "best_s": ...}}
+
+(``fields``/``exchange`` appear for multi-field runs: the ``exchange``
+section is the exchanges-only timing of the batched single-collective
+path vs the per-field loop.)  Several raw files normalize into one
+``{"schema": "bench-v2", "records": [...]}`` container so one BENCH file
+can carry multiple grid shapes.
 
 Usage:
     python benchmarks/normalize_bench.py fftbench.json --pr 3 --out BENCH_pr3.json
+    python benchmarks/normalize_bench.py slab.json pencil.json --pr 4 --out BENCH_pr4.json
 """
 
 from __future__ import annotations
@@ -38,11 +47,15 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
         "ndev": raw["ndev"],
         "real": bool(raw.get("real", False)),
         # identifies the workload: a dct/pruned plan of the same shape is
-        # not comparable to the plain c2c plan
+        # not comparable to the plain c2c plan, nor a 3-field batched run
+        # to a single-field one
         "transforms": raw.get("transforms"),
+        "fields": raw.get("fields", 1),
         "methods": rows,
         "best": {"method": best_tag, "best_s": rows[best_tag]["best_s"]},
     }
+    if raw.get("exchange"):
+        out["exchange"] = raw["exchange"]
     if pr is not None:
         out["pr"] = pr
     return out
@@ -50,13 +63,22 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("raw", help="fftbench --compare JSON output (file)")
+    ap.add_argument("raw", nargs="+",
+                    help="fftbench --compare JSON output file(s)")
     ap.add_argument("--pr", type=int, default=None, help="PR number tag")
     ap.add_argument("--out", default=None, help="output path (default: stdout)")
     args = ap.parse_args(argv)
-    # the compare table is the last JSON line (fftbench may log above it)
-    last = Path(args.raw).read_text().strip().splitlines()[-1]
-    rec = normalize(json.loads(last), pr=args.pr)
+    records = []
+    for path in args.raw:
+        # the compare table is the last JSON line (fftbench may log above it)
+        last = Path(path).read_text().strip().splitlines()[-1]
+        records.append(normalize(json.loads(last), pr=args.pr))
+    if len(records) == 1:
+        rec = records[0]
+    else:
+        rec = {"schema": "bench-v2", "records": records}
+        if args.pr is not None:
+            rec["pr"] = args.pr
     text = json.dumps(rec, indent=1, sort_keys=True)
     if args.out:
         Path(args.out).write_text(text + "\n")

@@ -154,7 +154,8 @@ def dealias_grid(n_keep: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def local_transform(x, axis: int, sign: int, spec: TransformSpec, *, n: int, impl: str = "jnp"):
+def local_transform(x, axis: int, sign: int, spec: TransformSpec, *, n: int,
+                    impl: str = "jnp", nbatch: int = 0):
     """One stage of the plan along a locally-complete ``axis``.
 
     Forward (``sign == FORWARD``): input logical length ``n`` ->
@@ -162,7 +163,13 @@ def local_transform(x, axis: int, sign: int, spec: TransformSpec, *, n: int, imp
     (``spec.n_keep``) is folded in here — the forward gather / backward
     zero-scatter is emitted adjacent to the transform so it fuses with the
     surrounding exchange unpack instead of costing a separate HBM pass.
+
+    ``nbatch`` leading axes of ``x`` are stacked field/batch axes and
+    ``axis`` stays field-relative (the batched plan executor transforms
+    all N fields of a stacked block in one vectorized call — every kernel
+    here is axis-generic, so the batch rides for free).
     """
+    axis = axis + nbatch
     if spec.kind == "c2c":
         if sign == FORWARD:
             y = _fft(x, axis, FORWARD, impl)

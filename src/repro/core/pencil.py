@@ -70,9 +70,17 @@ class Pencil:
     def spec(self) -> P:
         return P(*self.placement)
 
+    def batched_spec(self, nbatch: int = 1) -> P:
+        """PartitionSpec with ``nbatch`` leading replicated field/batch axes
+        (the in/out spec of a stacked multi-field ``shard_map``)."""
+        return P(*((None,) * nbatch), *self.placement)
+
     @cached_property
     def sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self.spec)
+
+    def batched_sharding(self, nbatch: int = 1) -> NamedSharding:
+        return NamedSharding(self.mesh, self.batched_spec(nbatch))
 
     @cached_property
     def local_shape(self) -> tuple[int, ...]:
@@ -136,16 +144,17 @@ def make_pencil(
     return Pencil(mesh=mesh, logical=logical, physical=tuple(physical), placement=placement)
 
 
-def pad_global(x: jax.Array, pencil: Pencil) -> jax.Array:
-    """Zero-pad a logical global array to the pencil's physical extents."""
-    pads = [(0, p - l) for l, p in zip(pencil.logical, pencil.physical)]
+def pad_global(x: jax.Array, pencil: Pencil, *, nbatch: int = 0) -> jax.Array:
+    """Zero-pad a logical global array to the pencil's physical extents
+    (``nbatch`` leading batch axes of ``x`` are left untouched)."""
+    pads = [(0, 0)] * nbatch + [(0, p - l) for l, p in zip(pencil.logical, pencil.physical)]
     if all(p == (0, 0) for p in pads):
         return x
     return jax.numpy.pad(x, pads)
 
 
-def unpad_global(x: jax.Array, pencil: Pencil) -> jax.Array:
+def unpad_global(x: jax.Array, pencil: Pencil, *, nbatch: int = 0) -> jax.Array:
     """Slice a physical global array back to its logical extents."""
     if pencil.logical == pencil.physical:
         return x
-    return x[tuple(slice(0, l) for l in pencil.logical)]
+    return x[(slice(None),) * nbatch + tuple(slice(0, l) for l in pencil.logical)]

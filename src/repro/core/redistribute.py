@@ -37,6 +37,25 @@ Three implementations of the v→w exchange of a distributed array:
 Both operate *per shard* (inside ``shard_map``) via ``exchange_shard`` and
 at the jit level on globally-sharded arrays via ``exchange``.
 
+Batched multi-field exchange (``nbatch``)
+-----------------------------------------
+
+Real spectral workloads (Navier–Stokes: u, v, w plus nonlinear products)
+push *many* fields through the same plan, and issuing one small all-to-all
+per field per stage leaves the interconnect latency-bound.  Every engine
+therefore accepts ``nbatch``: the leading ``nbatch`` axes of ``block`` are
+field/batch axes and ``v``/``w`` are *field-relative* array axes (the
+engine offsets them internally).  The whole stacked payload of all fields
+ships in **one** collective per exchange — message aggregation in the
+spirit of P3DFFT's many-variable API (arXiv:1905.02803) and the
+collective-optimized FFTs of arXiv:2306.16589 — and a lossy ``comm_dtype``
+codec runs once over the stacked block (one HBM quantize/dequantize pass
+total instead of one per field; int8 keeps one scale per (field,
+destination chunk) so fields of different magnitude never share a
+max-abs).  ``exchange_shard(stacked, v, w, group, nbatch=1)`` is the
+batched entry point :class:`repro.core.pfft.ParallelFFT` uses for its
+``batch_fusion="stacked"`` execution mode.
+
 Communication compression (``comm_dtype``)
 ------------------------------------------
 
@@ -91,6 +110,7 @@ def _all_to_all_comm(
     split_axis: int,
     concat_axis: int,
     comm_dtype: CommDtype | None = None,
+    batch_axes: tuple[int, ...] = (),
 ) -> jax.Array:
     """``lax.all_to_all(..., tiled=True)`` with an optional reduced-precision
     wire payload (the comm-compression core all three engines share).
@@ -102,6 +122,12 @@ def _all_to_all_comm(
     axis, and the result is decoded back to ``y``'s dtype.  For int8 the
     per-destination-chunk scales ride in a second, scale-sized all-to-all
     so each receiver dequantizes chunk ``j`` with sender ``j``'s scale.
+
+    ``batch_axes`` names the field/batch axes of a stacked multi-field
+    payload (``y``-axis indices): the collective and the bf16 codec are
+    batch-oblivious, but the int8 codec blocks its scales per (field,
+    destination chunk) so fields of different magnitude never share one
+    max-abs — the scale all-to-all ships ``m × prod(batch extents)`` f32s.
     """
     d = canonical_comm_dtype(comm_dtype)
     if d == "complex64":
@@ -110,6 +136,7 @@ def _all_to_all_comm(
     iscomplex = jnp.iscomplexobj(y)
     planes = quant.complex_to_planes(y) if iscomplex else y[None].astype(jnp.float32)
     sa, ca = split_axis + 1, concat_axis + 1
+    ba = tuple(b + 1 for b in batch_axes)  # planes coords
 
     if d == "bf16":
         p = lax.all_to_all(quant.encode_bf16(planes), axis_name,
@@ -117,16 +144,20 @@ def _all_to_all_comm(
         p = quant.decode_bf16(p)
         return quant.planes_to_complex(p) if iscomplex else p[0]
 
-    # int8: one scale per destination chunk of the split axis.
+    # int8: one scale per (field, destination chunk) of the split axis.
     m = _axis_size(axis_name)
     nv = planes.shape[sa]
     if nv % m != 0:
         raise ValueError(f"split axis extent {nv} not divisible by group size {m}")
     view = list(planes.shape)
     view[sa : sa + 1] = [m, nv // m]
-    q, scale = quant.quantize_int8(planes.reshape(view), block_axis=sa)
+    # block axes in view coords: the m-chunk axis plus every batch axis
+    # (axes past the inserted nv//m axis shift right by one)
+    block_axes = (sa,) + tuple(b if b < sa else b + 1 for b in ba)
+    q, scale = quant.quantize_int8(planes.reshape(view), block_axis=block_axes)
     q = q.reshape(planes.shape)
-    s = scale.reshape([m if i == sa else 1 for i in range(planes.ndim)])
+    # scale keepdims (view coords) -> planes coords: drop the nv//m axis
+    s = scale.reshape([e for i, e in enumerate(scale.shape) if i != sa + 1])
     qx = lax.all_to_all(q, axis_name, split_axis=sa, concat_axis=ca, tiled=True)
     sx = lax.all_to_all(s, axis_name, split_axis=sa, concat_axis=ca, tiled=True)
     # received chunk j along the concat axis was quantized with sender j's
@@ -148,6 +179,7 @@ def exchange_shard(
     chunks: int = 1,
     transposed_out: bool = False,
     comm_dtype: CommDtype | None = None,
+    nbatch: int = 0,
 ) -> jax.Array:
     """Per-shard v→w exchange over mesh subgroup ``group``.
 
@@ -159,47 +191,56 @@ def exchange_shard(
     affects ``method="traditional"``.  ``comm_dtype`` selects the wire
     payload encoding (see module docstring): ``None``/``"complex64"`` is
     lossless and bit-identical to the uncompressed exchange.
+
+    ``nbatch`` marks the leading ``nbatch`` axes of ``block`` as stacked
+    field/batch axes (see module docstring): ``v``/``w`` stay
+    *field-relative* and the one collective ships every field's payload —
+    the batched multi-field entry point.  With ``transposed_out=True`` the
+    chunk axis still comes out leading (before the batch axes).
     """
     if v == w:
         raise ValueError("exchange requires v != w (paper Alg. 3)")
     names = group_names(group)
     axis_name = names[0] if len(names) == 1 else names
+    bv, bw = v + nbatch, w + nbatch
+    batch_axes = tuple(range(nbatch))
 
     if method == "fused":
         # The paper's method: one generalized all-to-all; the split/concat
         # axes are the "subarray datatype" description.
-        return _all_to_all_comm(block, axis_name, split_axis=v, concat_axis=w,
-                                comm_dtype=comm_dtype)
+        return _all_to_all_comm(block, axis_name, split_axis=bv, concat_axis=bw,
+                                comm_dtype=comm_dtype, batch_axes=batch_axes)
 
     if method == "pipelined":
         pieces = exchange_shard_sliced(block, v, w, group, chunks=chunks,
-                                       comm_dtype=comm_dtype)
-        return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=v)
+                                       comm_dtype=comm_dtype, nbatch=nbatch)
+        return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=bv)
 
     if method == "traditional":
         m = _axis_size(axis_name)
-        nv = block.shape[v]
+        nv = block.shape[bv]
         if nv % m != 0:
             raise ValueError(f"axis v={v} extent {nv} not divisible by group size {m}")
         # Eq. (15): reshape v -> (m, nv/m); stride change only, free.
         shape = list(block.shape)
-        shape[v : v + 1] = [m, nv // m]
+        shape[bv : bv + 1] = [m, nv // m]
         y = block.reshape(shape)
         # Eq. (16): bring the chunk axis to the front — the materialized
         # local transpose (the costly pack step traditional codes pay for).
-        y = jnp.moveaxis(y, v, 0)
+        y = jnp.moveaxis(y, bv, 0)
         # Eq. (17)+ALLTOALL: contiguous exchange on the leading chunk axis.
         y = _all_to_all_comm(y, axis_name, split_axis=0, concat_axis=0,
-                             comm_dtype=comm_dtype)
+                             comm_dtype=comm_dtype,
+                             batch_axes=tuple(b + 1 for b in batch_axes))
         # Unpack: leading chunk q now carries peer q's w-shard (global w order).
         if transposed_out:
             # FFTW "transposed out": keep chunk-major layout, caller handles it.
             return y
         # Insert the chunk axis just before w (chunk-major == global w order)
         # and merge (m, w_shard) -> w_full: the second materialized copy.
-        z = jnp.moveaxis(y, 0, w)
+        z = jnp.moveaxis(y, 0, bw)
         shape = list(z.shape)
-        shape[w : w + 2] = [shape[w] * shape[w + 1]]
+        shape[bw : bw + 2] = [shape[bw] * shape[bw + 1]]
         return z.reshape(shape)
 
     raise ValueError(f"unknown method {method!r}")
@@ -213,6 +254,7 @@ def exchange_shard_sliced(
     *,
     chunks: int,
     comm_dtype: CommDtype | None = None,
+    nbatch: int = 0,
 ) -> list[jax.Array]:
     """The fused v→w exchange as ``chunks`` independent per-slice
     all-to-alls (the ``pipelined`` engine).
@@ -228,30 +270,36 @@ def exchange_shard_sliced(
     compute.  (Under a lossy ``comm_dtype`` the slices quantize
     independently — different max-abs blocks than the fused engine — so the
     results agree only to the codec's error bound, not bitwise.)
+
+    ``nbatch`` leading batch axes ride along whole in every slice
+    (``v``/``w`` field-relative, as in :func:`exchange_shard`): each slice
+    is still one collective carrying all fields' sub-range.
     """
     names = group_names(group)
     axis_name = names[0] if len(names) == 1 else names
     m = _axis_size(axis_name)
-    nv = block.shape[v]
+    bv, bw = v + nbatch, w + nbatch
+    nv = block.shape[bv]
     if nv % m != 0:
         raise ValueError(f"axis v={v} extent {nv} not divisible by group size {m}")
     b = nv // m
     sizes = [n for n in local_lengths(b, max(1, min(chunks, b))) if n > 0]
     # view v as (m, b); the concat axis shifts right if it follows v
     shape = list(block.shape)
-    shape[v : v + 1] = [m, b]
+    shape[bv : bv + 1] = [m, b]
     y = block.reshape(shape)
-    w_eff = w if w < v else w + 1
+    w_eff = bw if bw < bv else bw + 1
     pieces = []
     off = 0
     for n in sizes:
-        piece = lax.slice_in_dim(y, off, off + n, axis=v + 1)
+        piece = lax.slice_in_dim(y, off, off + n, axis=bv + 1)
         off += n
-        p = _all_to_all_comm(piece, axis_name, split_axis=v, concat_axis=w_eff,
-                             comm_dtype=comm_dtype)
+        p = _all_to_all_comm(piece, axis_name, split_axis=bv, concat_axis=w_eff,
+                             comm_dtype=comm_dtype,
+                             batch_axes=tuple(range(nbatch)))
         # p's m-factor axis now has extent 1: merge (1, n) -> (n,)
         pshape = list(p.shape)
-        pshape[v : v + 2] = [n]
+        pshape[bv : bv + 2] = [n]
         pieces.append(p.reshape(pshape))
     return pieces
 
@@ -313,16 +361,19 @@ def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
 
 def exchange_wire_bytes(
     src: Pencil, v: int, w: int, *, itemsize: int = 8,
-    comm_dtype: CommDtype | None = None,
+    comm_dtype: CommDtype | None = None, nfields: int = 1,
 ) -> int:
     """Bytes each rank actually puts on the wire: the exchanged elements at
     the narrowed payload width (bf16 planes: itemsize/2; int8 planes:
-    itemsize/4 plus one f32 scale per peer destination)."""
+    itemsize/4 plus one f32 scale per peer destination).  ``nfields``
+    prices a stacked multi-field exchange: payload × N, and int8 ships one
+    scale per (field, destination)."""
     d = canonical_comm_dtype(comm_dtype)
-    total = exchange_cost_bytes(src, v, w) * itemsize // wire_ratio(d)
+    total = exchange_cost_bytes(src, v, w) * nfields * itemsize // wire_ratio(d)
     if d == "int8":
         m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
-        total += 4 * (m - 1)  # per-destination f32 scales (kept chunk excluded)
+        # per-(field, destination) f32 scales (kept chunk excluded)
+        total += 4 * (m - 1) * nfields
     return total
 
 
@@ -333,6 +384,15 @@ def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "
     (the layout change rides inside the collective)."""
     local = int(np.prod(src.local_shape, dtype=np.int64))
     return {"fused": 0, "pipelined": local, "traditional": 2 * local}.get(method, 0)
+
+
+#: modeled fixed cost per issued collective (launch + rendezvous); the term
+#: that makes per-field exchanges of many small fields latency-bound and a
+#: stacked batched exchange win
+ICI_LATENCY_S = 1e-6
+
+#: batch_fusion execution modes for a stacked multi-field exchange stage
+BATCH_FUSIONS = ("stacked", "pipelined-across-fields", "per-field")
 
 
 def exchange_time_model(
@@ -347,19 +407,33 @@ def exchange_time_model(
     ici_bw: float = 50e9,
     hbm_bw: float = 819e9,
     overlap_compute_s: float = 0.0,
+    nfields: int = 1,
+    batch_fusion: str = "stacked",
+    ici_latency_s: float = ICI_LATENCY_S,
 ) -> float:
     """Overlap-aware modeled seconds for one exchange (+ the 1-D FFT stage
-    that follows it, whose time the caller passes as ``overlap_compute_s``).
+    that follows it, whose *per-field* time the caller passes as
+    ``overlap_compute_s``).
 
     fused/traditional serialize collective then compute; pipelined with c
     slices exposes only the first slice's collective and the last slice's
     compute, overlapping the rest:
 
-        T = T_comm/c + max(T_comm, T_fft)·(c-1)/c + T_fft/c
+        T = c·T_lat + T_comm/c + max(T_comm, T_fft)·(c-1)/c + T_fft/c
 
     A narrowed ``comm_dtype`` shrinks T_comm to the wire bytes of
     :func:`exchange_wire_bytes` but adds two HBM passes over the local
     block (quantize before / dequantize after the collective).
+
+    ``nfields`` fields ship under one of the ``batch_fusion`` modes:
+
+    ``"stacked"``                  — one collective carries all N fields:
+        1 latency, N× bytes/compute (wins when latency-bound).
+    ``"pipelined-across-fields"``  — N collectives, field i's collective
+        hidden under field i-1's FFT:
+        T = N·T_lat + T_comm + (N-1)·max(T_comm, T_fft) + T_fft.
+    ``"per-field"``                — N fully serialized exchange+FFT pairs
+        (the baseline a per-field loop pays).
     """
     d = canonical_comm_dtype(comm_dtype)
     comm_s = exchange_wire_bytes(src, v, w, itemsize=itemsize, comm_dtype=d) / ici_bw
@@ -368,8 +442,26 @@ def exchange_time_model(
         # encode: read wide + write narrow; decode: read narrow + write wide
         local = int(np.prod(src.local_shape, dtype=np.int64))
         copy_s += 2 * local * (itemsize + itemsize // wire_ratio(d)) / hbm_bw
-    if method == "pipelined" and chunks > 1:
-        c = chunks
-        pipe = comm_s / c + max(comm_s, overlap_compute_s) * (c - 1) / c + overlap_compute_s / c
-        return pipe + copy_s
-    return comm_s + overlap_compute_s + copy_s
+
+    def one(comm, fft):
+        """One exchange of ``comm`` seconds of wire plus ``fft`` seconds of
+        following compute, under the plan's engine."""
+        if method == "pipelined" and chunks > 1:
+            c = chunks
+            return (c * ici_latency_s + comm / c
+                    + max(comm, fft) * (c - 1) / c + fft / c)
+        return ici_latency_s + comm + fft
+
+    n = max(1, nfields)
+    if n == 1 or batch_fusion == "stacked":
+        return one(comm_s * n, overlap_compute_s * n) + copy_s * n
+    if batch_fusion == "per-field":
+        return n * (one(comm_s, overlap_compute_s) + copy_s)
+    if batch_fusion == "pipelined-across-fields":
+        # each field's exchange is emitted whole (chunked engines still
+        # issue `chunks` collectives per field — price every launch)
+        launches = n * (chunks if method == "pipelined" and chunks > 1 else 1)
+        fft = overlap_compute_s
+        return (launches * ici_latency_s + comm_s + (n - 1) * max(comm_s, fft)
+                + fft + n * copy_s)
+    raise ValueError(f"unknown batch_fusion {batch_fusion!r}; expected one of {BATCH_FUSIONS}")

@@ -15,20 +15,31 @@ exchange stage is the cross product of
   int8 is expected to win only on firmly ICI-bound stages: the narrowed
   payload must buy back the codec's two extra HBM passes over the block.
 
+* batch fusion (multi-field executions, ``nfields > 1``): how the stacked
+  fields traverse the stage — ``stacked`` (one collective ships all
+  fields), ``pipelined-across-fields`` (field i's collective emitted under
+  field i-1's FFT), or ``per-field`` (serialized baseline).  Latency-bound
+  small grids favor stacked; compute-heavy stages favor
+  pipelined-across-fields.
+
 This module micro-benchmarks each candidate on the stage's real shapes (the
 exchange plus the 1-D FFT it feeds, so overlap is priced in) and caches the
 winning schedule on disk.
 
-Cache schema v3: each entry maps a :func:`plan_key` — mesh shape, global
+Cache schema v4: each entry maps a :func:`plan_key` — mesh shape, global
 shape, grid, the per-axis transform tags (so a dealiased/pruned or DCT plan
 never collides with the plain c2c plan of the same shape), impl, backend
 *and device kind* (so timings from different TPU generations under the same
-``backend`` string never collide), the candidate set, and ``schema: 3`` —
-to ``{"schedule": [[method, chunks, comm_dtype], ...], "timings": {...}}``.
-v1/v2 entries (no transforms field / older schema tags) have incompatible
-keys and are simply never matched; stale entries are harmless.  Writes are atomic (temp file + ``os.replace``) so
-concurrent benchmark workers sharing a cache cannot interleave partial
-JSON.
+``backend`` string never collide), **the batch size** (``nfields`` — a
+3-field schedule must never be replayed for a 16-field execution), the
+candidate set, and ``schema: 4`` — to ``{"schedule": [[method, chunks,
+comm_dtype(, batch_fusion)], ...], "timings": {...}}`` (4-field entries for
+``nfields > 1``).  v1–v3 entries (no transforms/nfields field / older
+schema tags) have incompatible keys and are simply never matched; stale
+entries are harmless and a corrupt or non-dict cache file is silently
+treated as empty and rewritten — a stale cache must never raise.  Writes
+are atomic (temp file + ``os.replace``) so concurrent benchmark workers
+sharing a cache cannot interleave partial JSON.
 
 Cache location: ``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/fft_tuner.json``;
 an in-process memo avoids re-reading the file per plan.
@@ -47,10 +58,10 @@ import jax.numpy as jnp
 
 from repro.core.meshutil import shard_map
 from repro.core.quant import canonical_comm_dtype
-from repro.core.redistribute import PIPELINE_CHUNK_CANDIDATES, exchange_shard
+from repro.core.redistribute import BATCH_FUSIONS, PIPELINE_CHUNK_CANDIDATES
 
 #: cache schema version (bump when the key or entry layout changes)
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 #: (method, chunks) engine candidates benchmarked per exchange stage
 ENGINE_CANDIDATES: tuple[tuple[str, int], ...] = (
@@ -74,6 +85,23 @@ def candidates_for(comm_dtype=None) -> tuple[tuple[str, int, str], ...]:
     return tuple((m, c, d) for d in ladder for m, c in ENGINE_CANDIDATES)
 
 
+def batched_candidates_for(comm_dtype=None) -> tuple[tuple[str, int, str, str], ...]:
+    """4-field (method, chunks, comm_dtype, batch_fusion) candidate set for
+    a multi-field execution: every single-field candidate × every batch
+    fusion mode."""
+    return tuple((m, c, d, f) for f in BATCH_FUSIONS
+                 for m, c, d in candidates_for(comm_dtype))
+
+
+def _default_candidates(plan, nfields: int):
+    budget = getattr(plan, "comm_dtype", None)
+    return candidates_for(budget) if nfields <= 1 else batched_candidates_for(budget)
+
+
+def _tag(cand) -> str:
+    return "@".join(str(p) for p in cand)
+
+
 #: default candidate set (lossless budget)
 DEFAULT_CANDIDATES = candidates_for("complex64")
 
@@ -92,9 +120,11 @@ def default_cache_path() -> Path:
     return Path.home() / ".cache" / "repro" / "fft_tuner.json"
 
 
-def _key_fields(plan) -> dict:
+def _key_fields(plan, nfields: int = 1) -> dict:
     """Everything that determines the stage shapes and the hardware the
-    timings are valid for (the candidate-set-independent part of the key)."""
+    timings are valid for (the candidate-set-independent part of the key).
+    ``nfields`` is part of the identity: batched stage shapes (and the
+    stacked-vs-per-field trade) change with the batch size."""
     mesh_sig = tuple(zip(plan.mesh.axis_names, plan.mesh.devices.shape))
     try:
         device_kind = jax.devices()[0].device_kind
@@ -104,24 +134,30 @@ def _key_fields(plan) -> dict:
             "grid": plan.grid,
             "transforms": tuple(sp.tag() for sp in plan.transforms),
             "impl": plan.impl, "backend": jax.default_backend(),
-            "device_kind": device_kind}
+            "device_kind": device_kind, "nfields": nfields}
 
 
-def plan_key(plan, candidates=None) -> str:
-    """Cache key: everything that determines the stage shapes, the engines
-    and payloads swept, and the hardware the timings are valid for."""
+def plan_key(plan, candidates=None, *, nfields: int = 1) -> str:
+    """Cache key: everything that determines the stage shapes, the engines,
+    payloads and batch fusions swept, the batch size, and the hardware the
+    timings are valid for."""
     if candidates is None:
-        candidates = candidates_for(getattr(plan, "comm_dtype", None))
-    fields = _key_fields(plan)
-    fields["candidates"] = sorted(f"{m}@{c}@{d}" for m, c, d in candidates)
+        candidates = _default_candidates(plan, nfields)
+    fields = _key_fields(plan, nfields)
+    fields["candidates"] = sorted(_tag(c) for c in candidates)
     return json.dumps(fields, sort_keys=True, default=str)
 
 
 def load_cache(path: Path) -> dict:
+    """Read a schedule cache, returning ``{}`` for anything unusable — a
+    missing file, unreadable bytes, invalid JSON, or a JSON payload that is
+    not an object (a stale or corrupt cache must never raise: it is simply
+    retuned and rewritten)."""
     try:
-        return json.loads(Path(path).read_text())
+        data = json.loads(Path(path).read_text())
     except (OSError, ValueError):
         return {}
+    return data if isinstance(data, dict) else {}
 
 
 def save_cache(path: Path, data: dict) -> bool:
@@ -145,98 +181,132 @@ def save_cache(path: Path, data: dict) -> bool:
 
 
 def get_or_tune(plan, *, cache_path: str | None = None,
-                candidates=None) -> tuple[tuple[str, int, str], ...]:
-    """Return the tuned (method, chunks, comm_dtype) per exchange stage for
-    ``plan``, consulting the in-process memo, then the disk cache, then
-    benchmarking.  The default candidate set is every engine × every
-    payload within the plan's ``comm_dtype`` accuracy budget."""
+                candidates=None, nfields: int = 1):
+    """Return the tuned schedule for ``plan`` — (method, chunks, comm_dtype)
+    per exchange stage, plus a batch_fusion field when ``nfields > 1`` —
+    consulting the in-process memo, then the disk cache, then benchmarking.
+    The default candidate set is every engine × every payload within the
+    plan's ``comm_dtype`` accuracy budget (× every batch fusion mode for a
+    batched plan).  A stale-schema or otherwise malformed cache entry is
+    ignored and overwritten, never raised on."""
     if candidates is None:
-        candidates = candidates_for(getattr(plan, "comm_dtype", None))
+        candidates = _default_candidates(plan, nfields)
     path = Path(cache_path) if cache_path else default_cache_path()
-    key = plan_key(plan, candidates)
+    key = plan_key(plan, candidates, nfields=nfields)
     memo_key = f"{path}|{key}"
     if memo_key in _MEMO:
         return _MEMO[memo_key]
     disk = load_cache(path)
-    if key in disk:
-        sched = tuple((str(m), int(c), str(d)) for m, c, d in disk[key]["schedule"])
-    else:
-        sched, timings = tune_plan(plan, candidates=candidates)
+    # entry arity follows the candidate arity (an explicit 3-field candidate
+    # list tunes/stores 3-field entries even for a batched plan — the
+    # executor defaults their batch_fusion to "stacked")
+    want_len = len(candidates[0]) if candidates else (3 if nfields <= 1 else 4)
+    sched = _parse_entry(disk.get(key), plan.n_exchanges, want_len)
+    if sched is None:
+        sched, timings = tune_plan(plan, candidates=candidates, nfields=nfields)
         disk[key] = {"schedule": [list(s) for s in sched], "timings": timings}
         save_cache(path, disk)
     _MEMO[memo_key] = sched
     return sched
 
 
-def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2):
-    """Micro-benchmark every candidate (engine, chunks, comm_dtype) for
-    every exchange stage of ``plan`` (each stage timed together with the
-    1-D FFT it feeds, so a pipelined candidate gets credit for overlap) and
-    return (schedule, timings) with
-    ``timings[stage][method@chunks@comm_dtype] = seconds``."""
+def _parse_entry(entry, n_exchanges: int, want_len: int):
+    """Validate one disk-cache entry into a schedule tuple, or ``None`` if
+    missing/malformed — wrong arity, wrong stage count, junk types, or
+    unknown engine/payload/fusion *values* (a hand-edited or bit-rotted
+    entry must retune, never raise later inside the executor)."""
+    try:
+        raw = entry["schedule"]
+        sched = tuple((str(e[0]), int(e[1]), *(str(x) for x in e[2:])) for e in raw)
+        if len(sched) != n_exchanges or any(len(e) != want_len for e in sched):
+            return None
+        for e in sched:
+            if e[0] not in ("fused", "traditional", "pipelined") or e[1] < 1:
+                return None
+            canonical_comm_dtype(e[2])  # ValueError on junk -> caught below
+            if want_len == 4 and e[3] not in BATCH_FUSIONS:
+                return None
+        return sched
+    except (TypeError, KeyError, IndexError, ValueError):
+        pass
+    return None
+
+
+def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2,
+              nfields: int = 1):
+    """Micro-benchmark every candidate — (engine, chunks, comm_dtype), plus
+    a batch_fusion field for ``nfields > 1`` — for every exchange stage of
+    ``plan`` (each stage timed together with the 1-D FFT it feeds, so
+    pipelined candidates get credit for overlap; batched candidates run on
+    the real stacked ``(nfields, …)`` stage shapes) and return
+    (schedule, timings) with ``timings[stage][tag] = seconds``."""
     from repro.core.pfft import ExchangeStage
 
     if candidates is None:
-        candidates = candidates_for(getattr(plan, "comm_dtype", None))
-    base_key = json.dumps(_key_fields(plan), sort_keys=True, default=str)
-    schedule: list[tuple[str, int, str]] = []
+        candidates = _default_candidates(plan, nfields)
+    base_key = json.dumps(_key_fields(plan, nfields), sort_keys=True, default=str)
+    schedule = []
     timings: dict[str, dict[str, float]] = {}
     for si, st in enumerate(plan.stages):
         if not isinstance(st, ExchangeStage):
             continue
         per = {}
-        for method, chunks, comm_dtype in candidates:
-            tag = f"{method}@{chunks}@{comm_dtype}"
+        by_tag = {}
+        for cand in candidates:
+            tag = _tag(cand)
+            by_tag[tag] = cand
             memo_key = (base_key, si, tag)
             if memo_key in _STAGE_MEMO:
                 per[tag] = _STAGE_MEMO[memo_key]
                 continue
             try:
-                per[tag] = _time_stage(plan, si, method, chunks, comm_dtype,
-                                       repeats=repeats, inner=inner)
+                per[tag] = _time_stage(plan, si, *cand, repeats=repeats,
+                                       inner=inner, nfields=nfields)
                 _STAGE_MEMO[memo_key] = per[tag]
             except Exception as e:  # candidate invalid for this shape
                 per[tag] = float("inf")
                 per[f"{tag}:error"] = repr(e)[:200]
         best = min((k for k in per if ":" not in k), key=lambda k: per[k])
-        method, chunks, comm_dtype = best.split("@")
-        schedule.append((method, int(chunks), comm_dtype))
+        cand = by_tag[best]
+        schedule.append((cand[0], int(cand[1]), *cand[2:]))
         timings[f"stage{si}"] = per  # errors kept: an inf needs its reason
     return tuple(schedule), timings
 
 
-def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str, *,
-                repeats: int, inner: int) -> float:
-    """Wall-time one exchange stage (+ its following FFT) under one engine
-    and payload."""
+def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str,
+                batch_fusion: str = "stacked", *, repeats: int, inner: int,
+                nfields: int = 1) -> float:
+    """Wall-time one exchange stage (+ its following FFT) under one engine,
+    payload, and — for a stacked ``nfields > 1`` input — batch fusion mode,
+    via the same stage executor the plan runs
+    (:func:`repro.core.pfft._run_exchange_stage`)."""
     from repro.core import fftcore
-    from repro.core.pfft import FFTStage, _exchange_then_fft, _fft_padded_axis
+    from repro.core.pfft import FFTStage, _run_exchange_stage
 
     st = plan.stages[si]
     before = plan.pencil_trace[si]
     follow = plan.stages[si + 1] if si + 1 < len(plan.stages) else None
     has_fft = isinstance(follow, FFTStage) and follow.axis == st.w
     out_pen = plan.pencil_trace[si + 2] if has_fft else plan.pencil_trace[si + 1]
+    nbatch = 1 if nfields > 1 else 0
+    entry = (method, chunks, comm_dtype, batch_fusion)
 
     def run(block):
-        if has_fft and method == "pipelined" and chunks > 1:
-            return _exchange_then_fft(
-                block, st, follow, plan.pencil_trace[si + 1], out_pen,
-                chunks=chunks, comm_dtype=comm_dtype, impl=plan.impl,
-                sign=fftcore.FORWARD)
-        block = exchange_shard(block, st.v, st.w, st.group,
-                               method=method, chunks=chunks, comm_dtype=comm_dtype)
-        if has_fft:
-            block = _fft_padded_axis(block, follow, plan.pencil_trace[si + 1],
-                                     out_pen, impl=plan.impl, sign=fftcore.FORWARD)
-        return block
+        out, _ = _run_exchange_stage(
+            block, st, follow if has_fft else None, plan.pencil_trace[si + 1],
+            out_pen if has_fft else None, entry, impl=plan.impl,
+            sign=fftcore.FORWARD, nbatch=nbatch)
+        return out
 
-    fn = jax.jit(shard_map(run, mesh=plan.mesh, in_specs=before.spec,
-                           out_specs=out_pen.spec, check_vma=False))
+    fn = jax.jit(shard_map(run, mesh=plan.mesh,
+                           in_specs=before.batched_spec(nbatch),
+                           out_specs=out_pen.batched_spec(nbatch),
+                           check_vma=False))
     # time at the stage's true dtype: exchanges before any complex-producing
     # transform (all-real DCT/DST plans) ship f32, not complex64
-    x = jax.device_put(jnp.zeros(before.physical, plan.dtype_trace[si]),
-                       before.sharding)
+    x = jax.device_put(jnp.zeros((nfields,) * nbatch + tuple(before.physical),
+                                 plan.dtype_trace[si]),
+                       before.batched_sharding(nbatch))
     jax.block_until_ready(fn(x))  # compile + warm
     best = float("inf")
     for _ in range(repeats):

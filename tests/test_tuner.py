@@ -1,5 +1,6 @@
 """Exchange-schedule autotuner: candidate sweep (engines × comm_dtype
-payloads), schema-v3 disk cache round-trip, atomic writes."""
+payloads × batch fusions), schema-v4 disk cache round-trip, stale-cache
+migration, atomic writes."""
 
 import json
 import threading
@@ -94,6 +95,68 @@ print("BUDGET CACHE OK", json.dumps([list(s) for s in sched]))
     assert "BUDGET CACHE OK" in out
 
 
+def test_stale_or_corrupt_cache_ignored_and_rewritten(subproc, tmp_path):
+    """Cache migration (PR 4 satellite): a schema-v3 (or corrupt) cache
+    file dropped in the cache path before ``method="auto"`` must be
+    silently ignored and rewritten with a valid schema-v4 entry — never
+    raise.  Covers: invalid JSON, a JSON non-dict, a stale v3-style entry
+    set, and a matching v4 key whose entry body is malformed."""
+    cache = tmp_path / "fft_tuner.json"
+    code = f"""
+import json
+from pathlib import Path
+from repro.core import tuner
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+
+cache = Path({str(cache)!r})
+mesh = make_mesh((2, 2), ("p0", "p1"))
+stale_payloads = [
+    '{{ not json',                                     # corrupt bytes
+    '[1, 2, 3]',                                       # valid JSON, wrong container
+    json.dumps({{'{{"schema": 3, "mesh": []}}':        # v3-era entry set
+                 {{"schedule": [["fused", 1, "complex64"]], "timings": {{}}}}}}),
+]
+for payload in stale_payloads:
+    cache.write_text(payload)
+    tuner._MEMO.clear()
+    plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
+                       tuner_cache=str(cache))
+    sched = plan.schedule  # must tune and rewrite, not raise
+    assert len(sched) == plan.n_exchanges == 2
+    disk = json.loads(cache.read_text())  # rewritten as valid JSON
+    key = tuner.plan_key(plan)
+    assert key in disk
+    assert json.loads(key)["schema"] == tuner.SCHEMA_VERSION == 4
+    print("ok", payload[:30])
+
+# a *matching* v4 key whose entry body is junk must also fall back to
+# retuning instead of raising or replaying garbage
+plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
+                   tuner_cache=str(cache))
+key = tuner.plan_key(plan)
+for bad_entry in ("garbage", {{"schedule": "garbage"}}, {{"schedule": [["x"]]}},
+                  {{"schedule": [["fused", 1, "complex64"]]}},  # wrong stage count
+                  # structurally valid but unknown engine / payload values:
+                  # must retune, not raise later inside the executor
+                  {{"schedule": [["bogus", 1, "complex64"],
+                                 ["fused", 1, "complex64"]]}},
+                  {{"schedule": [["fused", 1, "float8"],
+                                 ["fused", 1, "complex64"]]}}):
+    cache.write_text(json.dumps({{key: bad_entry}}))
+    tuner._MEMO.clear()
+    p = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
+                    tuner_cache=str(cache))
+    sched = p.schedule
+    assert len(sched) == 2 and all(len(e) == 3 for e in sched)
+    disk = json.loads(cache.read_text())
+    assert [tuple(s) for s in disk[key]["schedule"]] == list(sched)
+print("STALE CACHE MIGRATION OK")
+"""
+    out = subproc(code, ndev=4)
+    assert "STALE CACHE MIGRATION OK" in out
+
+
 def test_plan_key_discriminates():
     """Key must change with anything that changes stage shapes/engines."""
     from repro.core.meshutil import make_mesh
@@ -112,6 +175,10 @@ def test_plan_key_discriminates():
     ):
         keys.add(tuner.plan_key(plan))
     assert len(keys) == 7
+    # batch size is part of the key: 1-field and N-field schedules never collide
+    keys.add(tuner.plan_key(base, nfields=3))
+    keys.add(tuner.plan_key(base, nfields=8))
+    assert len(keys) == 9
     # keys are deterministic and json-round-trippable
     assert tuner.plan_key(base) == tuner.plan_key(base)
     decoded = json.loads(tuner.plan_key(base))
@@ -136,6 +203,12 @@ def test_candidates_cover_issue_matrix():
     for m, c, d in tuner.candidates_for("int8"):
         assert (m, c) in tuner.ENGINE_CANDIDATES
         assert d in ("complex64", "bf16", "int8")
+    # batched candidates: every single-field candidate x every fusion mode
+    batched = tuner.batched_candidates_for("bf16")
+    assert len(batched) == 3 * len(tuner.candidates_for("bf16"))
+    assert {f for _, _, _, f in batched} == {
+        "stacked", "pipelined-across-fields", "per-field"}
+    assert {(m, c, d) for m, c, d, _ in batched} == set(tuner.candidates_for("bf16"))
 
 
 def test_save_cache_atomic(tmp_path):
