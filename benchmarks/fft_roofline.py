@@ -84,7 +84,7 @@ def lower_fft(shape, mesh_shape, axis_names, grid, *, real, method, impl="jnp"):
     return rec
 
 
-def main(argv=None):
+def main(_argv=None):
     ART.mkdir(parents=True, exist_ok=True)
     scale = os.environ.get("REPRO_BENCH_SCALE", "small")
     if scale == "paper":

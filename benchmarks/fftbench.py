@@ -94,7 +94,7 @@ def exchanges_only(plan, *, nfields=1, batch_fusion="stacked"):
     nbatch = 1 if nfields > 1 else 0
 
     def run(block):
-        for ex_i, (st, before, after, dtype) in enumerate(stages):
+        for ex_i, (st, before, _after, dtype) in enumerate(stages):
             # emulate the fft-stage shape *and dtype* change between
             # exchanges (an r2c mid-plan means later exchanges carry
             # complex64 while earlier ones carried f32)
@@ -227,6 +227,9 @@ def main(argv=None):
     ap.add_argument("--inner", type=int, default=3)
     ap.add_argument("--outer", type=int, default=10)
     ap.add_argument("--measure", choices=["total", "redistribution"], default="total")
+    ap.add_argument("--no-audit", action="store_true",
+                    help="skip the per-row planlint audit (one extra compile "
+                         "per --compare row)")
     args = ap.parse_args(argv)
 
     shape = tuple(int(s) for s in args.shape.split(","))
@@ -238,7 +241,9 @@ def main(argv=None):
     if args.compare:
         out = {"shape": shape, "grid": args.grid, "real": bool(args.real),
                "transforms": list(transforms) if transforms else None,
-               "ndev": ndev, "fields": args.fields, "methods": {}}
+               "ndev": ndev, "fields": args.fields,
+               "device_kind": jax.devices()[0].device_kind,
+               "backend": jax.default_backend(), "methods": {}}
         fusions = (["stacked", "pipelined-across-fields", "per-field"]
                    if args.fields > 1 else ["stacked"])
         for method in METHODS:
@@ -269,6 +274,11 @@ def main(argv=None):
                             itemsize=None, nfields=args.fields),
                         "wire_bytes_per_dev": plan.comm_bytes_per_device(
                             None, nfields=args.fields),
+                        # static certification of the timed artifact: the
+                        # row's numbers are meaningless if the compiled plan
+                        # doesn't match its claimed schedule
+                        "audit": None if args.no_audit
+                        else plan.audit(nfields=args.fields).summary(),
                     }
                     if args.fields > 1 and method == "auto":
                         # one fusion pass suffices: auto tunes batch_fusion
@@ -310,6 +320,8 @@ def main(argv=None):
         "batch_fusion": args.batch_fusion if nf > 1 else None,
         "real": bool(plan.input_dtype == jnp.float32),
         "ndev": ndev, "measure": args.measure,
+        "device_kind": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
         "transforms": [sp.tag() for sp in plan.transforms],
         "best_s": best,
         "comm_bytes_per_dev": plan.comm_bytes_per_device(None, nfields=nf),

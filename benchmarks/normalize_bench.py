@@ -27,7 +27,23 @@ from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+
+
+def git_sha() -> str | None:
+    """Short SHA of the checkout that produced this record (a perf number
+    without provenance can't be attributed to a change), or None outside a
+    git checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=_REPO, capture_output=True, text=True,
+                             timeout=10)
+    except OSError:
+        return None
+    return out.stdout.strip() or None if out.returncode == 0 else None
 
 
 def normalize(raw: dict, pr: int | None = None) -> dict:
@@ -38,6 +54,9 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
             "model_time_s": rec.get("model_time_s"),
             "wire_bytes_per_dev": rec.get("wire_bytes_per_dev"),
             "schedule": rec.get("schedule"),
+            # planlint certification of the timed artifact (fftbench
+            # --compare rows carry it unless run with --no-audit)
+            "audit": rec.get("audit"),
         }
     best_tag = min(rows, key=lambda t: rows[t]["best_s"])
     out = {
@@ -51,6 +70,11 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
         # to a single-field one
         "transforms": raw.get("transforms"),
         "fields": raw.get("fields", 1),
+        # hardware + code provenance: records from different device kinds
+        # or commits are different experiments, not regressions
+        "device_kind": raw.get("device_kind"),
+        "backend": raw.get("backend"),
+        "git_sha": git_sha(),
         "methods": rows,
         "best": {"method": best_tag, "best_s": rows[best_tag]["best_s"]},
     }

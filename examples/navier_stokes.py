@@ -139,7 +139,7 @@ print(f"Taylor-Green DNS: {N}^3 retained modes on a {M}^3 grid (3/2-rule "
       f"fused dealiasing), mesh={dict(mesh.shape)}, nu={NU}, dt={DT}")
 print(f"t=0      E={E0:.6f}  max|div|={float(max_divergence(u_hat)):.2e}")
 Es = [E0]
-for n in range(STEPS):
+for _ in range(STEPS):
     u_hat = step(u_hat)
     Es.append(float(energy(u_hat)))
 div = float(max_divergence(u_hat))

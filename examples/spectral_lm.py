@@ -56,7 +56,7 @@ targets = jnp.roll(tokens, -1, axis=1)
 
 step = jax.jit(jax.value_and_grad(loss_fn))
 loss0 = None
-for i in range(10):
+for _ in range(10):
     loss, g = step(params, tokens, targets)
     params = jax.tree.map(lambda p, gg: p - 0.5 * gg, params, g)
     loss0 = loss0 if loss0 is not None else float(loss)

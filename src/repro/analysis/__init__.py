@@ -1,0 +1,30 @@
+"""Static analysis of compiled plans and source (`planlint`).
+
+:mod:`repro.analysis.planlint` audits a compiled :class:`ParallelFFT` plan
+against its schedule contracts — collective launch counts, per-collective
+wire bytes, the paper's no-realignment invariant, and dtype flow — by
+walking the lowered jaxpr and the optimized HLO.
+:mod:`repro.analysis.srclint` is the companion AST lint over source files
+for shard_map pitfalls.  ``python -m repro.analysis.planlint`` runs both
+over the example plans and emits a JSON report.
+"""
+
+__all__ = ["AuditReport", "Violation", "audit_plan", "Finding", "lint_paths"]
+
+_EXPORTS = {
+    "AuditReport": "repro.analysis.planlint",
+    "Violation": "repro.analysis.planlint",
+    "audit_plan": "repro.analysis.planlint",
+    "Finding": "repro.analysis.srclint",
+    "lint_paths": "repro.analysis.srclint",
+}
+
+
+def __getattr__(name):
+    # lazy re-export: keeps `python -m repro.analysis.planlint` from
+    # importing the submodule twice (runpy's double-import warning)
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

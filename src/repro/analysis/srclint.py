@@ -1,0 +1,287 @@
+"""srclint — AST lint over source trees for shard_map pitfalls.
+
+Pure-stdlib companion to :mod:`repro.analysis.planlint` (no jax import):
+parses every ``.py`` file under the given paths and reports
+
+SRC101  a collective primitive (``lax.all_to_all`` / ``psum`` / ...) called
+        in a function not reachable from any ``shard_map`` region.  A
+        collective outside shard_map traces fine and fails (or silently
+        misbehaves) at run time; reachability is a project-wide
+        name-closure seeded from every name mentioned inside a
+        ``shard_map(...)`` call's function argument, so helpers invoked
+        transitively from a mapped function count as covered.
+SRC102  an axis-name string literal passed to a collective that is not
+        declared by any ``make_mesh``/``Mesh`` axis-name tuple in the
+        scanned tree (skipped when the tree declares no literal axis names
+        — axis names flowing in as parameters cannot be checked
+        statically).
+SRC103  a ``shard_map(..., in_specs=(...), ...)`` whose function argument
+        is a plain named def with a known positional arity that differs
+        from the ``in_specs`` tuple literal's length — the mismatch
+        otherwise only explodes at trace time.
+SRC104  cache-key construction hazards: ``json.dumps`` without
+        ``sort_keys=True`` inside a ``*key*``-named function (two
+        semantically equal dicts must serialize to one cache key), and a
+        dict literal used as a subscript key (unhashable at run time).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+
+#: jax collective callables that require an enclosing shard_map/pmap region
+COLLECTIVE_NAMES = frozenset({
+    "all_to_all", "psum", "psum_scatter", "pmean", "pmax", "pmin",
+    "ppermute", "pshuffle", "all_gather", "axis_index",
+})
+
+#: callables whose call sites declare a mapped region (first arg = body fn)
+_SHARD_MAP_NAMES = frozenset({"shard_map", "_shard_map", "pmap"})
+
+#: callables whose string arguments declare mesh axis names
+_MESH_CTORS = frozenset({"make_mesh", "Mesh", "AbstractMesh"})
+
+
+@dataclass
+class Finding:
+    code: str
+    path: str
+    line: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+def _call_name(node: ast.Call) -> str | None:
+    """Trailing name of the called expression: ``lax.all_to_all`` ->
+    ``all_to_all``, ``shard_map`` -> ``shard_map``."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return None
+
+
+def _names_in(node: ast.AST):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+
+
+@dataclass
+class _FnInfo:
+    name: str
+    path: str
+    line: int
+    arity: tuple[int, int] | None  # (min, max) positional arity; None if *args
+    calls: set                  # names this function calls
+    collectives: list           # (name, line) of direct collective calls
+
+
+class _ModuleScan(ast.NodeVisitor):
+    """One file's worth of facts for the project-wide passes."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.fns: list[_FnInfo] = []
+        self.seeds: set[str] = set()          # names inside shard_map fn args
+        self.axis_decls: set[str] = set()     # declared mesh axis names
+        self.axis_uses: list = []             # (literal, line)
+        self.spec_arity: list = []            # (fn_name, n_specs, line)
+        self.aliases: dict[str, str] = {}     # import asname -> original name
+        self.findings: list[Finding] = []
+        self._stack: list[_FnInfo] = []
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        for alias in node.names:
+            if alias.asname and alias.asname != alias.name:
+                self.aliases[alias.asname] = alias.name
+        self.generic_visit(node)
+
+    # -- function tracking --------------------------------------------------
+
+    def _visit_fn(self, node):
+        a = node.args
+        if a.vararg:
+            arity = None  # *args: any spec arity is fine
+        else:
+            hi = len(a.posonlyargs) + len(a.args)
+            arity = (hi - len(a.defaults), hi)
+        info = _FnInfo(node.name, self.path, node.lineno, arity, set(), [])
+        self.fns.append(info)
+        self._stack.append(info)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    # -- calls ---------------------------------------------------------------
+
+    def visit_Call(self, node: ast.Call):
+        name = _call_name(node)
+        cur = self._stack[-1] if self._stack else None
+        if name:
+            if cur is not None:
+                cur.calls.add(name)
+            if name in COLLECTIVE_NAMES:
+                self._note_collective(node, name, cur)
+            elif name in _SHARD_MAP_NAMES and node.args:
+                self.seeds.update(_names_in(node.args[0]))
+                self._note_spec_arity(node)
+            elif name in _MESH_CTORS:
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                        self.axis_decls.add(sub.value)
+            elif name == "dumps" and cur is not None and "key" in cur.name.lower():
+                if not any(kw.arg == "sort_keys" for kw in node.keywords):
+                    self.findings.append(Finding(
+                        "SRC104", self.path, node.lineno,
+                        f"json.dumps in {cur.name}() without sort_keys=True: "
+                        f"dict ordering leaks into the cache key"))
+        self.generic_visit(node)
+
+    def _note_collective(self, node: ast.Call, name: str, cur):
+        if cur is None:
+            self.findings.append(Finding(
+                "SRC101", self.path, node.lineno,
+                f"collective {name} called at module scope (outside any "
+                f"shard_map-mapped function)"))
+        else:
+            cur.collectives.append((name, node.lineno))
+        # axis-name literal usage: second positional arg or axis_name kwarg
+        cands = list(node.args[1:2]) + [kw.value for kw in node.keywords
+                                        if kw.arg == "axis_name"]
+        for c in cands:
+            if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                self.axis_uses.append((c.value, node.lineno))
+            elif isinstance(c, ast.Tuple):
+                for el in c.elts:
+                    if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                        self.axis_uses.append((el.value, node.lineno))
+
+    def _note_spec_arity(self, node: ast.Call):
+        fn_arg = node.args[0]
+        if not isinstance(fn_arg, ast.Name):
+            return  # partial/lambda/attribute: arity unknowable here
+        for kw in node.keywords:
+            if kw.arg == "in_specs" and isinstance(kw.value, ast.Tuple):
+                self.spec_arity.append(
+                    (fn_arg.id, len(kw.value.elts), node.lineno))
+
+    def visit_Subscript(self, node: ast.Subscript):
+        key = node.slice
+        if isinstance(key, ast.Dict) or (
+                isinstance(key, ast.Call) and _call_name(key) == "dict"):
+            self.findings.append(Finding(
+                "SRC104", self.path, node.lineno,
+                "dict used as a subscript key (unhashable): hash or "
+                "json-serialize it first"))
+        self.generic_visit(node)
+
+
+def _iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = [d for d in dirs
+                       if d not in ("__pycache__", ".git", ".venv", "node_modules")]
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def lint_paths(paths) -> list[Finding]:
+    """Lint every ``.py`` under ``paths``; returns findings sorted by file
+    and line.  Files that fail to parse yield a single SRC100 finding."""
+    scans: list[_ModuleScan] = []
+    findings: list[Finding] = []
+    for path in _iter_py_files(paths):
+        try:
+            with open(path, encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+        except (OSError, SyntaxError) as e:
+            findings.append(Finding("SRC100", path, getattr(e, "lineno", 0) or 0,
+                                    f"unparseable: {e}"))
+            continue
+        scan = _ModuleScan(path)
+        scan.visit(tree)
+        scans.append(scan)
+        findings.extend(scan.findings)
+
+    # project-wide reachability closure (SRC101).  Calls through an import
+    # alias (``from m import f as g``) count as calls to the original name.
+    aliases: dict[str, str] = {}
+    for s in scans:
+        aliases.update(s.aliases)
+
+    def _expand(names):
+        out = set(names)
+        out.update(aliases[n] for n in names if n in aliases)
+        return out
+
+    seeds = set().union(*(_expand(s.seeds) for s in scans)) if scans else set()
+    calls_by_name: dict[str, set] = {}
+    for s in scans:
+        for fn in s.fns:
+            calls_by_name.setdefault(fn.name, set()).update(_expand(fn.calls))
+    reachable = set()
+    frontier = [n for n in seeds if n in calls_by_name]
+    while frontier:
+        n = frontier.pop()
+        if n in reachable:
+            continue
+        reachable.add(n)
+        frontier.extend(c for c in calls_by_name.get(n, ())
+                        if c in calls_by_name and c not in reachable)
+    for s in scans:
+        for fn in s.fns:
+            if fn.collectives and fn.name not in reachable and fn.name not in seeds:
+                for cname, line in fn.collectives:
+                    findings.append(Finding(
+                        "SRC101", s.path, line,
+                        f"collective {cname} in {fn.name}(), which is not "
+                        f"reachable from any shard_map region in the "
+                        f"scanned tree"))
+
+    # axis-name literals vs declared mesh axes (SRC102)
+    declared = set().union(*(s.axis_decls for s in scans)) if scans else set()
+    if declared:
+        for s in scans:
+            for axis, line in s.axis_uses:
+                if axis not in declared:
+                    findings.append(Finding(
+                        "SRC102", s.path, line,
+                        f"axis name {axis!r} is not declared by any "
+                        f"make_mesh/Mesh in the scanned tree "
+                        f"(declared: {sorted(declared)})"))
+
+    # in_specs arity vs mapped function arity (SRC103)
+    arity_by_name: dict[str, tuple[int, int] | None] = {}
+    for s in scans:
+        for fn in s.fns:
+            # conflicting defs with the same name: give up on that name
+            if fn.name in arity_by_name and arity_by_name[fn.name] != fn.arity:
+                arity_by_name[fn.name] = None
+            else:
+                arity_by_name.setdefault(fn.name, fn.arity)
+    for s in scans:
+        for fn_name, n_specs, line in s.spec_arity:
+            arity = arity_by_name.get(fn_name)
+            if arity is not None and not arity[0] <= n_specs <= arity[1]:
+                findings.append(Finding(
+                    "SRC103", s.path, line,
+                    f"shard_map in_specs has {n_specs} specs but "
+                    f"{fn_name}() takes {arity[0]}..{arity[1]} positional "
+                    f"args"))
+
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))

@@ -468,29 +468,34 @@ class ParallelFFT:
         (complex64 exchanges at 8, still-real f32 exchanges at 4).
         ``nfields`` prices a batched multi-field execution (stacked wire
         payload and N× local-copy traffic)."""
-        from repro.core.redistribute import exchange_local_copy_elems, exchange_wire_bytes
+        from repro.core.redistribute import (
+            exchange_local_copy_elems, exchange_wire_bytes, pipeline_slices)
 
         if comm_dtype is None:
             batched = self._batched_sched_memo.get(nfields) if nfields > 1 else None
             if batched is not None:
                 # a resolved batched schedule carries the per-stage tuned
                 # payloads of *this* batch size
-                dtypes = [_sched_entry(e)[2] for e in batched]
+                entries = [_sched_entry(e)[:3] for e in batched]
             elif self.method == "auto" and "schedule" not in self.__dict__:
                 # stay pure arithmetic: a byte count must never trigger the
                 # tuner; price the uniform budget until a schedule exists
-                dtypes = [self.comm_dtype] * self.n_exchanges
+                entries = [("fused", 1, self.comm_dtype)] * self.n_exchanges
             else:
-                dtypes = [d for _, _, d in self.schedule]
+                entries = [(m, c, d) for m, c, d in self.schedule]
         else:
-            dtypes = [canonical_comm_dtype(comm_dtype)] * self.n_exchanges
+            entries = [("fused", 1, canonical_comm_dtype(comm_dtype))] * self.n_exchanges
         total, ex_i = 0, 0
         for i, st in enumerate(self.stages):
             if isinstance(st, ExchangeStage):
                 isz = itemsize if itemsize is not None else self._stage_itemsize(i)
+                e_method, e_chunks, e_dtype = entries[ex_i]
+                slices = (pipeline_slices(self.pencil_trace[i], st.v, st.w,
+                                          chunks=e_chunks)
+                          if e_method == "pipelined" else 1)
                 total += exchange_wire_bytes(self.pencil_trace[i], st.v, st.w,
-                                             itemsize=isz, comm_dtype=dtypes[ex_i],
-                                             nfields=nfields)
+                                             itemsize=isz, comm_dtype=e_dtype,
+                                             nfields=nfields, slices=slices)
                 ex_i += 1
                 if method is not None:
                     total += exchange_local_copy_elems(
@@ -560,6 +565,19 @@ class ParallelFFT:
                 total += nfields * self._stage_flops_at(i, stages, pencils, dtypes) / ndev / peak_flops
             i += 1
         return total
+
+
+    def audit(self, *, nfields: int = 1, direction: str = "forward",
+              schedule=None):
+        """Statically audit this plan's compiled artifact against its
+        schedule contracts (collective counts, wire bytes, the
+        no-realignment invariant, dtype flow).  Convenience wrapper around
+        :func:`repro.analysis.planlint.audit_plan`; returns its
+        :class:`~repro.analysis.planlint.AuditReport`."""
+        from repro.analysis.planlint import audit_plan
+
+        return audit_plan(self, nfields=nfields, direction=direction,
+                          schedule=schedule)
 
 
 def _repad(pencil: Pencil, axis: int, divisor: int) -> Pencil:

@@ -348,7 +348,7 @@ def exchange(
 # ---------------------------------------------------------------------------
 
 
-def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
+def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:  # noqa: ARG001 — (src, v, w) parity with the exchange_* family
     """Elements each rank sends in the exchange (itemsize excluded): the
     full local block minus the chunk it keeps.  Identical for all methods —
     the element count is a property of the redistribution, not the engine.
@@ -361,23 +361,66 @@ def exchange_cost_bytes(src: Pencil, v: int, w: int) -> int:
 
 def exchange_wire_bytes(
     src: Pencil, v: int, w: int, *, itemsize: int = 8,
-    comm_dtype: CommDtype | None = None, nfields: int = 1,
+    comm_dtype: CommDtype | None = None, nfields: int = 1, slices: int = 1,
 ) -> int:
     """Bytes each rank actually puts on the wire: the exchanged elements at
     the narrowed payload width (bf16 planes: itemsize/2; int8 planes:
     itemsize/4 plus one f32 scale per peer destination).  ``nfields``
     prices a stacked multi-field exchange: payload × N, and int8 ships one
-    scale per (field, destination)."""
+    scale per (field, destination).  ``slices`` is the pipelined engine's
+    collective count (see :func:`pipeline_slices`): the payload bytes are
+    invariant to slicing, but each int8 slice quantizes independently and
+    ships its own scale set."""
     d = canonical_comm_dtype(comm_dtype)
     total = exchange_cost_bytes(src, v, w) * nfields * itemsize // wire_ratio(d)
     if d == "int8":
         m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
         # per-(field, destination) f32 scales (kept chunk excluded)
-        total += 4 * (m - 1) * nfields
+        total += 4 * (m - 1) * nfields * max(1, slices)
     return total
 
 
-def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "fused") -> int:
+def pipeline_slices(src: Pencil, v: int, w: int, *, chunks: int) -> int:
+    """Number of independent all-to-all slices the pipelined engine emits
+    for this exchange: ``min(chunks, b)`` nonempty pieces of the
+    post-exchange shard extent ``b = n_v/m`` (mirrors the slicing loop in
+    :func:`exchange_shard_sliced`, so planlint's expected-launch count and
+    the executed collective count can never drift apart)."""
+    m = group_size(src.mesh, src.placement[w])  # type: ignore[arg-type]
+    b = src.local_shape[v] // m
+    return len([n for n in local_lengths(b, max(1, min(chunks, b))) if n > 0])
+
+
+def exchange_engine_ops(
+    src: Pencil, v: int, w: int, *, method: Method = "fused", chunks: int = 1,
+    transposed_out: bool = False, nbatch: int = 0,
+) -> dict[str, int]:
+    """Materialized realignment ops (``transpose`` / ``concatenate`` jaxpr
+    eqns) each engine's shard function emits *outside* the collective — the
+    contract :mod:`repro.analysis.planlint` checks the lowered jaxpr
+    against.
+
+    ``fused`` emits none: the strided split/concat rides inside the single
+    all-to-all (the paper's Sec. 3.3.2 claim, stated as an auditable
+    count).  ``traditional`` pays its documented pack and unpack moveaxis
+    copies — except when the moved axis is already leading (``v+nbatch ==
+    0`` packs for free; ``w+nbatch == 0`` or ``transposed_out`` skips the
+    unpack), where jnp.moveaxis is the identity and no transpose eqn
+    exists.  ``pipelined`` emits one concatenate reassembling its slices
+    whenever it actually slices (>1 pieces)."""
+    if method == "traditional":
+        bv, bw = v + nbatch, w + nbatch
+        t = int(bv != 0) + int(bw != 0 and not transposed_out)
+        return {"transposes": t, "concats": 0}
+    if method == "pipelined":
+        s = pipeline_slices(src, v, w, chunks=chunks)
+        return {"transposes": 0, "concats": int(s > 1)}
+    if method == "fused":
+        return {"transposes": 0, "concats": 0}
+    raise ValueError(f"unknown method {method!r}")
+
+
+def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "fused") -> int:  # noqa: ARG001 — (src, v, w) parity with the exchange_* family
     """Elements of *materialized local copies* the method pays on top of the
     wire payload: traditional's pack+unpack transposes touch the local block
     twice; pipelined's final concat materializes it once; fused pays none

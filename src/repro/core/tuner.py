@@ -201,7 +201,8 @@ def get_or_tune(plan, *, cache_path: str | None = None,
     # list tunes/stores 3-field entries even for a batched plan — the
     # executor defaults their batch_fusion to "stacked")
     want_len = len(candidates[0]) if candidates else (3 if nfields <= 1 else 4)
-    sched = _parse_entry(disk.get(key), plan.n_exchanges, want_len)
+    sched = _parse_entry(disk.get(key), plan.n_exchanges, want_len,
+                         candidates=candidates)
     if sched is None:
         sched, timings = tune_plan(plan, candidates=candidates, nfields=nfields)
         disk[key] = {"schedule": [list(s) for s in sched], "timings": timings}
@@ -210,11 +211,17 @@ def get_or_tune(plan, *, cache_path: str | None = None,
     return sched
 
 
-def _parse_entry(entry, n_exchanges: int, want_len: int):
+def _parse_entry(entry, n_exchanges: int, want_len: int, candidates=None):
     """Validate one disk-cache entry into a schedule tuple, or ``None`` if
     missing/malformed — wrong arity, wrong stage count, junk types, or
     unknown engine/payload/fusion *values* (a hand-edited or bit-rotted
-    entry must retune, never raise later inside the executor)."""
+    entry must retune, never raise later inside the executor).
+
+    When ``candidates`` is given, every stage entry must additionally be a
+    member of that *live* candidate set: an entry naming an engine, chunk
+    count, payload or fusion that has since been dropped from the sweep
+    (e.g. a hand-edited chunks=16 after ``PIPELINE_CHUNK_CANDIDATES``
+    shrank) is a retune, not a schedule the executor should replay."""
     try:
         raw = entry["schedule"]
         sched = tuple((str(e[0]), int(e[1]), *(str(x) for x in e[2:])) for e in raw)
@@ -225,6 +232,10 @@ def _parse_entry(entry, n_exchanges: int, want_len: int):
                 return None
             canonical_comm_dtype(e[2])  # ValueError on junk -> caught below
             if want_len == 4 and e[3] not in BATCH_FUSIONS:
+                return None
+        if candidates is not None:
+            live = {tuple(c) for c in candidates}
+            if any(e not in live for e in sched):
                 return None
         return sched
     except (TypeError, KeyError, IndexError, ValueError):

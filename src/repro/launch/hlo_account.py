@@ -9,7 +9,9 @@ count (XLA annotates ``known_trip_count`` on while ops), and produces:
   flops              — 2*K*prod(result) per dot, trip-aware
   collectives[kind]  — per-device payload bytes per collective kind,
                        trip-aware (all-gather result/G, reduce-scatter
-                       result*G, others result-sized)
+                       result*G, all-to-all result*(G-1)/G — each device
+                       keeps one of its G split chunks, so only the other
+                       G-1 cross the wire; others result-sized)
   hbm_bytes          — streaming-traffic model, trip-aware: for every
                        top-level instruction, bytes actually read from
                        operands + bytes actually written.  Slicing
@@ -34,6 +36,7 @@ Known approximations (documented in EXPERIMENTS.md §Roofline):
 from __future__ import annotations
 
 import re
+import warnings
 from dataclasses import dataclass, field
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
@@ -41,6 +44,12 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
                 "u8": 1, "pred": 1, "s64": 8, "u64": 8, "c64": 8, "c128": 16}
 
 _SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+# any dtype-shaped token (known families + pred), for detecting shapes whose
+# dtype is missing from _DTYPE_BYTES: those are warned about once per dtype
+# instead of silently dropped from the byte accounting
+_ANY_SHAPE_RE = re.compile(r"\b((?:f|bf|c|s|u)[0-9][a-z0-9]*|pred)\[[0-9,]*\]")
+_WARNED_DTYPES: set[str] = set()
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
 _OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\]{},\s]*?))\s*([\w\-]+)\(")
@@ -49,6 +58,7 @@ _CALLED_RE = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)=
                         r"(?:\{([^}]*)\}|%?([\w.\-]+))")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 
 _SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
                  "while", "conditional", "call", "custom-call", "after-all",
@@ -67,7 +77,29 @@ def _shape_elems(dims: str) -> int:
 
 
 def _types_bytes(text: str) -> int:
+    for tok in _ANY_SHAPE_RE.findall(text):
+        if tok not in _DTYPE_BYTES and tok not in _WARNED_DTYPES:
+            _WARNED_DTYPES.add(tok)
+            warnings.warn(
+                f"hlo_account: dtype {tok!r} missing from _DTYPE_BYTES; "
+                f"shapes of this dtype are excluded from byte accounting",
+                stacklevel=2)
     return sum(_shape_elems(dims) * _DTYPE_BYTES[t] for t, dims in _SHAPE_RE.findall(text))
+
+
+def _group_size(line: str, n_operands: int = 0) -> int:
+    """Replica-group size of a collective: parsed from either the iota
+    (``replica_groups=[G,S]<=[N]``) or explicit-list
+    (``replica_groups={{a,b},...}``) HLO form; falls back to the operand
+    count for the decomposed (tuple-operand) all-to-all the CPU backend
+    emits without annotations."""
+    g = _GROUPS_RE.search(line)
+    if g:
+        return max(int(g.group(2)), 1)
+    g = _GROUPS_LIST_RE.search(line)
+    if g:
+        return max(len([t for t in g.group(1).split(",") if t.strip()]), 1)
+    return max(n_operands, 1)
 
 
 @dataclass
@@ -183,7 +215,7 @@ def _slice_aware_bytes(ins: Instr, index: dict[str, Instr],
         b = _types_bytes(upd.result) if upd else _types_bytes(ins.result)
         return 2.0 * b                                    # read + write update
     if ins.op == "fusion":
-        called = [g2 for g1, g2 in _CALLED_RE.findall(ins.line) if g2]
+        called = [g2 for _g1, g2 in _CALLED_RE.findall(ins.line) if g2]
         comp = comps.get(called[0]) if called else None
         if comp is None:
             return float(_types_bytes(ins.result))
@@ -253,6 +285,69 @@ def _slice_aware_bytes(ins: Instr, index: dict[str, Instr],
     return b
 
 
+def _collective_payload_bytes(ins: Instr) -> int:
+    """Per-device wire bytes of one collective instruction.
+
+    all-gather contributes its shard (result/G); reduce-scatter reads
+    result*G; all-to-all ships result*(G-1)/G — of the G split chunks each
+    device produces, one stays local and G-1 cross the wire (this matches
+    :func:`repro.core.redistribute.exchange_wire_bytes`'s (m-1)/m element
+    count, so planlint can diff the two directly); everything else is
+    priced result-sized."""
+    base = ins.op.replace("-start", "")
+    b = _types_bytes(ins.result)
+    gsize = _group_size(ins.line, len(ins.operands))
+    if base == "all-gather":
+        b //= gsize
+    elif base == "reduce-scatter":
+        b *= gsize
+    elif base == "all-to-all":
+        b = b * (gsize - 1) // gsize
+    return b
+
+
+def collective_instrs(hlo: str) -> list[dict]:
+    """Per-collective records of an optimized HLO module, trip-aware: one
+    dict per collective instruction in an executed computation, with
+
+      kind           — collective op name ("all-to-all", ...)
+      name           — instruction name
+      computation    — enclosing computation
+      mult           — execution count (trip-aware while multiplier)
+      group_size     — replica-group size (operand count for the CPU
+                       backend's decomposed tuple all-to-all)
+      result_bytes   — full result size
+      payload_bytes  — per-device wire bytes (see
+                       :func:`_collective_payload_bytes`), x ``mult``
+      dtypes         — dtype tokens appearing in the result shape
+
+    This is the per-instruction view :mod:`repro.analysis.planlint` diffs
+    against a plan's analytic ``exchange_wire_bytes`` model; ``account``
+    keeps returning only per-kind totals."""
+    comps = parse(hlo)
+    mults = execution_counts(comps, hlo)
+    out = []
+    for cname, comp in comps.items():
+        m = mults.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            base = ins.op.replace("-start", "")
+            if base not in _COLLECTIVES or ins.op.endswith("-done"):
+                continue
+            out.append({
+                "kind": base,
+                "name": ins.name,
+                "computation": cname,
+                "mult": m,
+                "group_size": _group_size(ins.line, len(ins.operands)),
+                "result_bytes": _types_bytes(ins.result),
+                "payload_bytes": m * _collective_payload_bytes(ins),
+                "dtypes": sorted({t for t, _ in _SHAPE_RE.findall(ins.result)}),
+            })
+    return out
+
+
 def account(hlo: str) -> dict:
     comps = parse(hlo)
     index = _instr_index(comps)
@@ -266,7 +361,7 @@ def account(hlo: str) -> dict:
     for comp in comps.values():
         for ins in comp.instrs:
             if ins.op == "fusion":
-                for g1, g2 in _CALLED_RE.findall(ins.line):
+                for _g1, g2 in _CALLED_RE.findall(ins.line):
                     if g2:
                         fusion_bodies.add(g2)
 
@@ -308,14 +403,7 @@ def account(hlo: str) -> dict:
                 flops += m * 2.0 * res * k
             base = ins.op.replace("-start", "")
             if base in _COLLECTIVES and not ins.op.endswith("-done"):
-                b = _types_bytes(ins.result)
-                g = _GROUPS_RE.search(ins.line)
-                gsize = int(g.group(2)) if g else 1
-                if base == "all-gather":
-                    b //= max(gsize, 1)
-                elif base == "reduce-scatter":
-                    b *= gsize
-                coll[base] = coll.get(base, 0.0) + m * b
+                coll[base] = coll.get(base, 0.0) + m * _collective_payload_bytes(ins)
             # streaming HBM-traffic model (top-level only)
             if not inside_fusion and ins.op not in _SKIP_TRAFFIC \
                     and not ins.op.endswith("-done"):

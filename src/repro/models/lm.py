@@ -88,12 +88,12 @@ class LM:
     def __init__(self, cfg: ArchConfig, mesh: Mesh, axes: Axes, *,
                  q_block: int = 512, xent_chunks: int = 8,
                  sp_mode: str = "none", batch_sharded: bool = True,
-                 perf: PerfFlags = PerfFlags(), local_mode: bool = False):
+                 perf: PerfFlags | None = None, local_mode: bool = False):
         self.cfg, self.mesh, self.axes = cfg, mesh, axes
         self.q_block, self.xent_chunks = q_block, xent_chunks
         self.sp_mode = sp_mode
         self.batch_sharded = batch_sharded
-        self.perf = perf
+        self.perf = perf if perf is not None else PerfFlags()
         # local_mode: run as a pure per-shard function (no sharding
         # constraints, no nested shard_map) — the explicit-DP/compressed-
         # gradient path wraps the whole loss in its own shard_map.

@@ -26,7 +26,7 @@ def test_error_feedback_unbiased_over_time():
     err = ErrorFeedback.init({"w": jnp.zeros((32,), jnp.float32)})
     tot_true = np.zeros(32)
     tot_sent = np.zeros(32)
-    for step in range(50):
+    for _ in range(50):
         g = {"w": jnp.asarray(rng.standard_normal(32) * 0.01, jnp.float32)}
         sent, err = ErrorFeedback.apply(g, err, quantize_roundtrip)
         tot_true += np.asarray(g["w"])

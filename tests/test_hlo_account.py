@@ -70,6 +70,73 @@ def test_dot_flops_with_batch_dims():
     assert account(txt)["flops"] == pytest.approx(2 * 4 * 32 * 8 * 16, rel=1e-6)
 
 
+def test_collective_instrs_payload_pricing():
+    """Per-instruction collective records price wire bytes by replica-group
+    size: all-to-all ships (G-1)/G of its result, all-gather one shard,
+    reduce-scatter reads G shards — on both replica_groups encodings."""
+    from repro.launch.hlo_account import collective_instrs
+
+    hlo = """
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,4]) -> f32[8,4] {
+  %x = f32[8,4]{1,0} parameter(0)
+  %a2a = f32[8,4]{1,0} all-to-all(%x), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %ag = f32[8,4]{1,0} all-gather(%a2a), replica_groups=[2,2]<=[4], dimensions={0}
+  ROOT %rs = f32[8,4]{1,0} reduce-scatter(%ag), replica_groups={{0,1},{2,3}}, to_apply=%add
+}
+"""
+    recs = {r["kind"]: r for r in collective_instrs(hlo)}
+    assert set(recs) == {"all-to-all", "all-gather", "reduce-scatter"}
+    assert all(r["group_size"] == 2 and r["result_bytes"] == 128
+               and r["mult"] == 1.0 for r in recs.values())
+    assert recs["all-to-all"]["payload_bytes"] == 128 * (2 - 1) // 2
+    assert recs["all-gather"]["payload_bytes"] == 128 // 2
+    assert recs["reduce-scatter"]["payload_bytes"] == 128 * 2
+    assert recs["all-to-all"]["dtypes"] == ["f32"]
+    # account() totals agree with the per-instruction view
+    coll = account(hlo)["collectives"]
+    assert coll["all-to-all"] == recs["all-to-all"]["payload_bytes"]
+    assert coll["total"] == sum(r["payload_bytes"] for r in recs.values())
+
+
+def test_group_size_tuple_operand_fallback():
+    """The CPU backend's decomposed all-to-all carries no usable
+    replica_groups annotation; group size falls back to the operand count."""
+    from repro.launch.hlo_account import collective_instrs
+
+    hlo = """
+ENTRY %main (a: f32[4], b: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %b = f32[4]{0} parameter(1)
+  ROOT %t = (f32[4]{0}, f32[4]{0}) all-to-all(%a, %b), dimensions={0}
+}
+"""
+    (rec,) = collective_instrs(hlo)
+    assert rec["group_size"] == 2
+    assert rec["result_bytes"] == 32          # tuple of two f32[4]
+    assert rec["payload_bytes"] == 32 * (2 - 1) // 2
+
+
+def test_unknown_dtype_warned_once():
+    """Shapes whose dtype is missing from _DTYPE_BYTES must warn (once per
+    dtype, process-wide) instead of silently vanishing from byte totals."""
+    import warnings
+
+    from repro.launch import hlo_account
+
+    hlo_account._WARNED_DTYPES.discard("f8e3m4")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert hlo_account._types_bytes("f8e3m4[16] f32[2]") == 8
+        assert hlo_account._types_bytes("f8e3m4[16]") == 0  # second: silent
+    assert len(w) == 1 and "f8e3m4" in str(w[0].message)
+
+
 def test_parse_computations():
     hlo = """
 %add (a: f32[], b: f32[]) -> f32[] {

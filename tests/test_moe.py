@@ -10,7 +10,7 @@ from repro.models.config import MoEConfig
 from repro.models.moe import moe_apply_a2a, moe_init, route
 
 
-def dense_moe_oracle(p, x, cfg, mlp_kind="swiglu"):
+def dense_moe_oracle(p, x, cfg, _mlp_kind="swiglu"):
     """Every token through its top-k experts, no capacity limit."""
     N, D = x.reshape(-1, x.shape[-1]).shape
     xt = np.asarray(x, np.float32).reshape(N, D)

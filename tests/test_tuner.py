@@ -151,6 +151,20 @@ for bad_entry in ("garbage", {{"schedule": "garbage"}}, {{"schedule": [["x"]]}},
     assert len(sched) == 2 and all(len(e) == 3 for e in sched)
     disk = json.loads(cache.read_text())
     assert [tuple(s) for s in disk[key]["schedule"]] == list(sched)
+
+# entries that parse fine but name candidates OUTSIDE the live sweep (a
+# cache written by a different build, or hand-edited) must retune too —
+# replaying them would execute a schedule the tuner never timed
+for poisoned in ([["pipelined", 16, "complex64"], ["fused", 1, "complex64"]],
+                 [["fused", 1, "int8"], ["fused", 1, "complex64"]]):
+    cache.write_text(json.dumps({{key: {{"schedule": poisoned, "timings": {{}}}}}}))
+    tuner._MEMO.clear()
+    p = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
+                    tuner_cache=str(cache))
+    sched = p.schedule
+    live = set(tuner.candidates_for(None))
+    assert all(tuple(e) in live for e in sched), (poisoned, sched)
+    assert list(map(list, sched)) != poisoned
 print("STALE CACHE MIGRATION OK")
 """
     out = subproc(code, ndev=4)
@@ -229,8 +243,10 @@ def test_save_cache_atomic(tmp_path):
             errs.append(e)
 
     threads = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
-    [t.start() for t in threads]
-    [t.join() for t in threads]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
     assert not errs
     json.loads(path.read_text())  # final state is one writer's full payload
     # no temp files left behind
