@@ -170,6 +170,55 @@ def _time_plan(plan, shape, args):
     return _best_of(lambda v: bwd(fwd(v)), xg, outer=args.outer, inner=args.inner)
 
 
+def _time_guard_pair(plan, shape, args):
+    """Measure the guarded round trip (fused health checks + per-shard
+    stat partials) against the unguarded one on the same input, returning
+    ``(unguarded_s, guarded_s)``.  The two executors alternate within
+    every outer round: timing them in separate back-to-back sweeps
+    conflates guard cost with machine drift (thermal/cache state shifts
+    over a sweep easily exceed the real overhead).  The guarded jits
+    return the stats vector, so XLA cannot dead-code-eliminate the guard
+    ops — this measures the real ``guard != "off"`` overhead."""
+    nf = args.fields
+    x = _make_input(plan, shape, nf)
+    from repro.core.pencil import pad_global
+
+    if nf > 1:
+        xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil, nbatch=1),
+                            plan.input_pencil.batched_sharding())
+        ufwd = jax.jit(plan.forward_many_padded(nf))
+        ubwd = jax.jit(plan.backward_many_padded(nf))
+        gfwd = jax.jit(plan.guarded_padded("forward", nfields=nf))
+        gbwd = jax.jit(plan.guarded_padded("backward", nfields=nf))
+    else:
+        xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
+                            plan.input_pencil.sharding)
+        ufwd, ubwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
+        gfwd = jax.jit(plan.guarded_padded("forward"))
+        gbwd = jax.jit(plan.guarded_padded("backward"))
+
+    def unguarded(v):
+        return ubwd(ufwd(v))
+
+    def guarded(v):
+        y, _ = gfwd(v)
+        z, _ = gbwd(y)
+        return z
+
+    unguarded(xg).block_until_ready()  # compile + warm
+    guarded(xg).block_until_ready()
+    best = {"u": float("inf"), "g": float("inf")}
+    for _ in range(args.outer):
+        for k, once in (("u", unguarded), ("g", guarded)):
+            t0 = time.perf_counter()
+            v = xg
+            for _ in range(args.inner):
+                v = once(v)
+            v.block_until_ready()
+            best[k] = min(best[k], (time.perf_counter() - t0) / args.inner)
+    return best["u"], best["g"]
+
+
 def _rand_block(shape, dtype):
     """Random buffer for exchange timings, complex when the stage is."""
     rng = np.random.default_rng(0)
@@ -215,6 +264,11 @@ def main(argv=None):
                     choices=["stacked", "pipelined-across-fields", "per-field"],
                     help="multi-field execution mode for single-method runs "
                          "(--compare sweeps all three)")
+    ap.add_argument("--guard", choices=["off", "strict", "degrade"],
+                    default="off",
+                    help="also time the guarded executor (fused runtime "
+                         "health checks) and report the overhead vs the "
+                         "unguarded round trip")
     ap.add_argument("--compare", action="store_true",
                     help="time all four methods x all --comm-dtypes payloads "
                          "and report one table")
@@ -313,6 +367,15 @@ def main(argv=None):
         best = _best_of(once, xg, outer=args.outer, inner=args.inner)
     else:
         best = _time_plan(plan, shape, args)
+    guard_section = None
+    if args.guard != "off" and args.measure == "total":
+        unguarded_s, guarded_s = _time_guard_pair(plan, shape, args)
+        guard_section = {
+            "mode": args.guard,
+            "unguarded_s": unguarded_s,
+            "guarded_s": guarded_s,
+            "overhead_frac": guarded_s / unguarded_s - 1.0,
+        }
     print(json.dumps({
         "shape": shape, "grid": args.grid, "method": args.method,
         "comm_dtype": plan.comm_dtype,
@@ -324,6 +387,7 @@ def main(argv=None):
         "backend": jax.default_backend(),
         "transforms": [sp.tag() for sp in plan.transforms],
         "best_s": best,
+        "guard": guard_section,
         "comm_bytes_per_dev": plan.comm_bytes_per_device(None, nfields=nf),
         "model_flops": plan.model_flops(nfields=nf),
     }))

@@ -10,7 +10,12 @@ schema
      "methods": {"fused@complex64": {"best_s": ..., "model_time_s": ...,
                  "wire_bytes_per_dev": ...}, ...},
      "exchange": {"fields": N, "stacked_s": ..., "per_field_s": ...},
+     "guard_mode": "off" | "strict" | "degrade",
      "best": {"method": "...", "best_s": ...}}
+
+(``guard_mode`` is stamped on every record — a number timed under runtime
+guards is a different experiment from an unguarded one; guarded runs also
+carry the raw ``guard`` section with the measured overhead_frac.)
 
 (``fields``/``exchange`` appear for multi-field runs: the ``exchange``
 section is the exchanges-only timing of the batched single-collective
@@ -48,15 +53,26 @@ def git_sha() -> str | None:
 
 def normalize(raw: dict, pr: int | None = None) -> dict:
     rows = {}
-    for tag, rec in raw["methods"].items():
+    if "methods" in raw:
+        for tag, rec in raw["methods"].items():
+            rows[tag] = {
+                "best_s": rec["best_s"],
+                "model_time_s": rec.get("model_time_s"),
+                "wire_bytes_per_dev": rec.get("wire_bytes_per_dev"),
+                "schedule": rec.get("schedule"),
+                # planlint certification of the timed artifact (fftbench
+                # --compare rows carry it unless run with --no-audit)
+                "audit": rec.get("audit"),
+            }
+    else:
+        # single-method fftbench blob (e.g. a --guard overhead run)
+        tag = f"{raw['method']}@{raw.get('comm_dtype') or 'complex64'}"
         rows[tag] = {
-            "best_s": rec["best_s"],
-            "model_time_s": rec.get("model_time_s"),
-            "wire_bytes_per_dev": rec.get("wire_bytes_per_dev"),
-            "schedule": rec.get("schedule"),
-            # planlint certification of the timed artifact (fftbench
-            # --compare rows carry it unless run with --no-audit)
-            "audit": rec.get("audit"),
+            "best_s": raw["best_s"],
+            "model_time_s": raw.get("model_time_s"),
+            "wire_bytes_per_dev": raw.get("comm_bytes_per_dev"),
+            "schedule": None,
+            "audit": None,
         }
     best_tag = min(rows, key=lambda t: rows[t]["best_s"])
     out = {
@@ -78,6 +94,11 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
         "methods": rows,
         "best": {"method": best_tag, "best_s": rows[best_tag]["best_s"]},
     }
+    # guard provenance: a record timed under runtime guards is a different
+    # experiment from an unguarded one — stamp the mode on every record
+    out["guard_mode"] = (raw.get("guard") or {}).get("mode", "off")
+    if raw.get("guard"):
+        out["guard"] = raw["guard"]
     if raw.get("exchange"):
         out["exchange"] = raw["exchange"]
     if pr is not None:

@@ -152,4 +152,28 @@ assert div < 1e-3 * np.sqrt(E0), f"divergence grew: {div}"
 rate = (Es[0] - Es[1]) / (DT * Es[0])
 print(f"measured initial decay rate {rate:.3f} vs 6*nu = {6 * NU:.3f}")
 assert abs(rate - 6 * NU) < 0.1 * 6 * NU
+
+# --- guarded execution demo ------------------------------------------------
+# A long DNS wants to survive a bad exchange, not die mid-run: the same
+# plan shape with guard="degrade" runs fused health checks and, when a
+# fault trips them, walks the precision/engine ladder and re-executes.
+# Inject a NaN into stage 0's input on the fused engine — the degraded
+# plan must recover a spectrum matching the healthy one and report every
+# transition it took.
+from repro.robustness import FaultPlan  # noqa: E402
+
+with FaultPlan().nan_input(stage=0, engine="fused"):
+    guarded = ParallelFFT(
+        mesh, (M, M, M), grid=("p0", "p1"), method="fused", guard="degrade",
+        transforms=(TransformSpec.pruned(N), TransformSpec.pruned(N),
+                    TransformSpec.r2c(n_keep=N // 2 + 1)),
+    )
+    g_hat, rep = guarded.forward(u0)
+g_hat = g_hat / SCALE
+assert rep.ok, f"guarded execution did not recover: {rep.tripped}"
+assert rep.transitions, "the injected fault should have forced a transition"
+assert jnp.allclose(g_hat, u0_hat, atol=1e-4 * float(jnp.abs(u0_hat).max()))
+print(f"guarded forward recovered in {rep.attempts} attempts; "
+      f"transitions: {[t['kind'] for t in rep.transitions]}; "
+      f"final schedule: {[list(e) for e in rep.schedule]}")
 print("ok")

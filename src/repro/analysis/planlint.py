@@ -28,6 +28,11 @@ PLAN006  unpaired quantize/dequantize: ``convert_element_type`` eqns into a
          narrow wire dtype (int8/bf16) must balance the converts back out.
 PLAN007  trip-aware HLO ``all-to-all`` instruction count == expected
          launches (the post-optimization cross-check of PLAN001).
+PLAN008  guard-op presence matches the plan's ``guard`` mode: eqns
+         source-attributed to ``repro/robustness/`` (the fused health
+         checks) must appear in a guarded executor's jaxpr and must be
+         **absent** — zero eqns — when ``guard="off"``, proving the
+         unguarded artifact is bit-identical to a pre-guard plan.
 
 Realignment is asserted at the **jaxpr** level: on the CPU backend XLA
 decomposes the tiled all-to-all into slice/concat + a tuple-operand
@@ -63,6 +68,11 @@ from dataclasses import dataclass, field
 #: modules whose transposes/concatenates are engine realignment ops: the
 #: exchange implementations and the plan executor that reassembles them
 ENGINE_MODULES = ("core/redistribute.py", "core/pfft.py")
+
+#: module prefix whose eqns are runtime guard ops (PLAN008): the fused
+#: health checks live in repro/robustness/ precisely so this attribution
+#: can prove guard="off" artifacts contain none of them
+GUARD_MODULE_PREFIX = "robustness/"
 
 #: narrow wire dtypes whose converts must pair up (PLAN006)
 _NARROW_WIRE_DTYPES = ("int8", "bfloat16")
@@ -129,6 +139,7 @@ class AuditReport:
             "hlo_wire_bytes": self.observed.get("hlo_all_to_all_bytes"),
             "engine_transposes": self.observed.get("engine_transposes"),
             "engine_concats": self.observed.get("engine_concats"),
+            "guard_eqns": self.observed.get("guard_eqns"),
         }
 
 
@@ -177,6 +188,7 @@ def _jaxpr_stats(jaxpr) -> dict:
     """Counts planlint checks against: all_to_all launches, source-attributed
     transposes/concatenates, narrow-dtype convert pairs, wide-dtype eqns."""
     a2a = 0
+    guard_eqns = 0
     transposes: dict[str, int] = {}
     concats: dict[str, int] = {}
     conv_in: dict[str, int] = {d: 0 for d in _NARROW_WIRE_DTYPES}
@@ -184,10 +196,13 @@ def _jaxpr_stats(jaxpr) -> dict:
     wide: list[str] = []
     for eqn in _iter_eqns(jaxpr):
         name = eqn.primitive.name
+        mod = _eqn_module(eqn)
+        if mod is not None and mod.startswith(GUARD_MODULE_PREFIX):
+            guard_eqns += 1
         if name == "all_to_all":
             a2a += 1
         elif name in ("transpose", "concatenate"):
-            mod = _eqn_module(eqn) or "<jax>"
+            mod = mod or "<jax>"
             tgt = transposes if name == "transpose" else concats
             tgt[mod] = tgt.get(mod, 0) + 1
         elif name == "convert_element_type":
@@ -205,6 +220,7 @@ def _jaxpr_stats(jaxpr) -> dict:
     eng_c = sum(n for m, n in concats.items() if m in ENGINE_MODULES)
     return {
         "jaxpr_all_to_alls": a2a,
+        "guard_eqns": guard_eqns,
         "engine_transposes": eng_t,
         "engine_concats": eng_c,
         "transposes_by_module": transposes,
@@ -362,6 +378,7 @@ def audit_plan(plan, *, nfields: int = 1, direction: str = "forward",
         raise ValueError(f"claimed schedule has {len(claimed)} entries for "
                          f"{plan.n_exchanges} exchange stages")
 
+    guard = getattr(plan, "guard", "off")
     if direction == "forward":
         in_pen, dtype = plan.input_pencil, plan.input_dtype
         fn = (plan.forward_many_padded(nfields) if nfields > 1
@@ -372,6 +389,10 @@ def audit_plan(plan, *, nfields: int = 1, direction: str = "forward",
               else plan.backward_padded)
     else:
         raise ValueError(f"unknown direction {direction!r}")
+    if guard != "off":
+        # audit the executor a guarded plan actually runs (its (block,
+        # stats) output is fine for make_jaxpr/lower)
+        fn = plan.guarded_padded(direction, nfields=nfields)
     shape = ((nfields,) if nfields > 1 else ()) + tuple(in_pen.physical)
     aval = jax.ShapeDtypeStruct(shape, dtype)
 
@@ -384,6 +405,17 @@ def audit_plan(plan, *, nfields: int = 1, direction: str = "forward",
             "PLAN001",
             f"jaxpr all_to_all count {observed['jaxpr_all_to_alls']} != "
             f"expected {expected['launches']} launches"))
+    if guard == "off" and observed["guard_eqns"]:
+        violations.append(Violation(
+            "PLAN008",
+            f"guard='off' artifact contains {observed['guard_eqns']} eqn(s) "
+            f"attributed to {GUARD_MODULE_PREFIX} — the unguarded jaxpr must "
+            f"be bit-identical to a pre-guard plan"))
+    elif guard != "off" and not observed["guard_eqns"]:
+        violations.append(Violation(
+            "PLAN008",
+            f"guard={guard!r} artifact contains no {GUARD_MODULE_PREFIX} "
+            f"eqns — the fused health checks are missing"))
     if observed["engine_transposes"] != expected["engine_transposes"]:
         violations.append(Violation(
             "PLAN003",
@@ -490,6 +522,12 @@ def _example_plans():
     return {
         "quickstart": (ParallelFFT(mesh, (42, 63, 64), grid=("p0", "p1"),
                                    method="fused"), 1),
+        # same plan with runtime guards on: PLAN008's positive case (guard
+        # eqns present) and proof the guarded artifact still meets every
+        # other schedule contract
+        "quickstart[guarded]": (ParallelFFT(mesh, (42, 63, 64),
+                                            grid=("p0", "p1"), method="fused",
+                                            guard="degrade"), 1),
         "navier_stokes": (ParallelFFT(
             mesh, (m, m, m), grid=("p0", "p1"), method="fused",
             transforms=(TransformSpec.pruned(n), TransformSpec.pruned(n),

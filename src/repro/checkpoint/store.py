@@ -88,21 +88,17 @@ def latest_step(directory: str | os.PathLike) -> int | None:
     return steps[-1] if steps else None
 
 
-def load_checkpoint(directory: str | os.PathLike, tree_like, *, step: int | None = None,
-                    shardings=None, verify: bool = True):
-    """Restore into the structure of ``tree_like``; re-shard if ``shardings``
-    (a congruent tree of Shardings) is given — the elastic-restart path."""
-    directory = Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
+def _intact_steps(directory: Path) -> list[int]:
+    """Step numbers with a renamed (non-.tmp) dir and a manifest, ascending."""
+    return sorted(int(p.name.split("_")[1]) for p in directory.glob("step_*")
+                  if not p.name.endswith(".tmp") and (p / "manifest.json").exists())
+
+
+def _load_step(directory: Path, step: int, flat, treedef, shard_flat, verify: bool):
+    """Restore one specific checkpoint step (raises on any corruption)."""
     ckpt = directory / f"step_{step:010d}"
     with open(ckpt / "manifest.json") as f:
         manifest = json.load(f)
-
-    flat, treedef = _flatten(tree_like)
-    shard_flat = _flatten(shardings)[0] if shardings is not None else {}
     out = {}
     for key in flat:
         meta = manifest["leaves"][key]
@@ -118,6 +114,52 @@ def load_checkpoint(directory: str | os.PathLike, tree_like, *, step: int | None
             out[key] = arr
     leaves = [out[k] for k in flat]
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+def load_checkpoint(directory: str | os.PathLike, tree_like, *, step: int | None = None,
+                    shardings=None, verify: bool = True, fallback: bool = True):
+    """Restore into the structure of ``tree_like``; re-shard if ``shardings``
+    (a congruent tree of Shardings) is given — the elastic-restart path.
+
+    With ``step=None`` (restore-latest) and ``fallback=True``, a checkpoint
+    that fails to restore — checksum mismatch, torn/missing leaf file,
+    unreadable manifest — does not strand the job: the loader walks earlier
+    intact checkpoints newest-first, warns about every one it skips, and
+    records them in the returned manifest as ``manifest["skipped_steps"]``
+    (``[{"step", "error"}, ...]``) so the caller can see exactly how much
+    progress was lost.  Only when *every* checkpoint is corrupt does it
+    raise, with each step's failure in the message.  An explicit ``step=``
+    (or ``fallback=False``) keeps the old fail-fast behavior."""
+    directory = Path(directory)
+    flat, treedef = _flatten(tree_like)
+    shard_flat = _flatten(shardings)[0] if shardings is not None else {}
+    if step is not None:
+        return _load_step(directory, step, flat, treedef, shard_flat, verify)
+
+    steps = _intact_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    if not fallback:
+        return _load_step(directory, steps[-1], flat, treedef, shard_flat, verify)
+
+    skipped: list[dict] = []
+    for s in reversed(steps):
+        try:
+            tree, manifest = _load_step(directory, s, flat, treedef, shard_flat,
+                                        verify)
+        except (OSError, ValueError, KeyError, EOFError) as e:
+            import warnings
+
+            warnings.warn(f"skipping corrupt checkpoint step {s}: {e!r}",
+                          stacklevel=2)
+            skipped.append({"step": s, "error": repr(e)[:300]})
+            continue
+        if skipped:
+            manifest = dict(manifest)
+            manifest["skipped_steps"] = skipped
+        return tree, manifest
+    detail = "; ".join(f"step {d['step']}: {d['error']}" for d in skipped)
+    raise IOError(f"every checkpoint under {directory} is corrupt — {detail}")
 
 
 class CheckpointManager:

@@ -66,15 +66,16 @@ from functools import cached_property, partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import fftcore
 from repro.core.fftcore import TransformSpec, as_spec
 from repro.core.meshutil import shard_map
 from repro.core.decomp import pad_to_multiple
-from repro.core.pencil import Group, Pencil, group_size, make_pencil, pad_global, unpad_global
+from repro.core.pencil import Group, Pencil, group_names, group_size, make_pencil, pad_global, unpad_global
 from repro.core.quant import canonical_comm_dtype
 from repro.core.redistribute import BATCH_FUSIONS, exchange_shard, exchange_shard_sliced
+from repro.robustness import faults as _faults, health as _health
 
 #: (method, chunks, comm_dtype) per ExchangeStage, in forward stage order
 Schedule = tuple[tuple[str, int, str], ...]
@@ -151,6 +152,15 @@ class ParallelFFT:
               baseline).  For method="auto" it is tuned per stage instead.
       tuner_cache: path for method="auto"'s schedule cache (default:
               $REPRO_TUNER_CACHE or ~/.cache/repro/fft_tuner.json).
+      guard:  runtime-guard mode (see :mod:`repro.robustness`): "off"
+              (default — compiles bit-identically to an unguarded plan),
+              "strict" (fused health checks; any trip raises
+              :class:`repro.robustness.GuardError`), or "degrade" (on a
+              trip or execution failure, widen the wire payload one rung /
+              fall back through the engines / quarantine-and-retune a bad
+              cache entry, then re-execute — bounded retries, every
+              transition logged).  Guarded ``forward``/``backward`` (and
+              the ``_many`` variants) return ``(result, HealthReport)``.
     """
 
     def __init__(
@@ -167,6 +177,7 @@ class ParallelFFT:
         comm_dtype: str | None = None,
         batch_fusion: str = "stacked",
         tuner_cache: str | None = None,
+        guard: str = "off",
     ):
         d, k = len(shape), len(grid)
         if not 1 <= k <= d - 1:
@@ -175,6 +186,8 @@ class ParallelFFT:
             raise ValueError(f"unknown method {method!r}")
         if batch_fusion not in BATCH_FUSIONS:
             raise ValueError(f"unknown batch_fusion {batch_fusion!r}; expected one of {BATCH_FUSIONS}")
+        if guard not in _health.GUARD_MODES:
+            raise ValueError(f"unknown guard {guard!r}; expected one of {_health.GUARD_MODES}")
         if transforms is not None:
             if real:
                 raise ValueError("pass either real=True or transforms=, not both")
@@ -203,9 +216,11 @@ class ParallelFFT:
         self.chunks, self.tuner_cache = chunks, tuner_cache
         self.comm_dtype = canonical_comm_dtype(comm_dtype)
         self.batch_fusion = batch_fusion
+        self.guard = guard
         self.d, self.k = d, k
         self._batched_sched_memo: dict[int, BatchedSchedule] = {}
         self._batched_exec: dict = {}
+        self._guarded_exec: dict = {}
 
         sizes = [group_size(mesh, g) for g in grid]
         # Per-axis divisibility: every subgroup an axis is ever distributed
@@ -363,20 +378,77 @@ class ParallelFFT:
                 out_specs=out_pen.batched_spec(), check_vma=False)
         return self._batched_exec[key]
 
+    def guarded_padded(self, direction: str = "forward", *, schedule=None,
+                       nfields: int = 1):
+        """shard_map'd guarded executor on physical (padded) blocks:
+        returns ``fn(block) -> (block, stats)`` where ``stats`` carries
+        every shard's packed guard-stat partial (sharded out_spec, no
+        extra collective); :func:`repro.robustness.health.unpack_partials`
+        sums them for :func:`~repro.robustness.health.build_report`.
+        ``schedule`` overrides the plan's resolved schedule — the
+        degradation ladder re-executes through here with widened entries;
+        executors are cached per (direction, schedule, nfields)."""
+        if schedule is None:
+            schedule = (self.batched_schedule(nfields) if nfields > 1
+                        else self.schedule)
+        schedule = tuple(_sched_entry(e) for e in schedule)
+        key = (direction, schedule, nfields)
+        if key not in self._guarded_exec:
+            nbatch = 1 if nfields > 1 else 0
+            if direction == "forward":
+                stages, pencils, sched = self.stages, self.pencil_trace, schedule
+                in_pen, out_pen, sign = self.input_pencil, self.output_pencil, fftcore.FORWARD
+            else:
+                stages, pencils = _reverse_plan(self.stages, self.pencil_trace)
+                sched = schedule[::-1]
+                in_pen, out_pen, sign = self.output_pencil, self.input_pencil, fftcore.BACKWARD
+            guard_axes = tuple(n for g in self.grid for n in group_names(g))
+
+            def guarded_fn(block, *, _stages=stages, _pencils=pencils,
+                           _sched=sched, _sign=sign):
+                return _run_stages(block, stages=_stages, pencils=_pencils,
+                                   schedule=_sched, impl=self.impl,
+                                   sign=_sign, nbatch=nbatch, guard=True)
+
+            # shard-local stat vectors concatenate along axis 0 — the
+            # runner sums the partials on the host, so the guarded hot
+            # path carries no stats collective at all
+            stats_spec = P(guard_axes) if guard_axes else P()
+            self._guarded_exec[key] = shard_map(
+                guarded_fn, mesh=self.mesh,
+                in_specs=in_pen.batched_spec(nbatch),
+                out_specs=(out_pen.batched_spec(nbatch), stats_spec),
+                check_vma=False)
+        return self._guarded_exec[key]
+
     def forward(self, x: jax.Array) -> jax.Array:
         """Logical-shape convenience wrapper (pads, transforms, unpads).
         A ``d+1``-dim input is treated as a stack of fields along a leading
-        batch axis and routed through the batched executor."""
+        batch axis and routed through the batched executor.  When the plan
+        was built with ``guard != "off"`` this returns
+        ``(result, HealthReport)`` instead (see :mod:`repro.robustness`)."""
         if x.ndim == self.d + 1:
             return self.forward_many(x)
         x = x.astype(self.input_dtype)
-        y = self.forward_padded(pad_global(x, self.input_pencil))
+        xpad = pad_global(x, self.input_pencil)
+        if self.guard != "off":
+            from repro.robustness import runner
+
+            y, report = runner.run_guarded(self, xpad, "forward")
+            return unpad_global(y, self.output_pencil), report
+        y = self.forward_padded(xpad)
         return unpad_global(y, self.output_pencil)
 
     def backward(self, x: jax.Array) -> jax.Array:
         if x.ndim == self.d + 1:
             return self.backward_many(x)
-        y = self.backward_padded(pad_global(x.astype(self.spectral_dtype), self.output_pencil))
+        xpad = pad_global(x.astype(self.spectral_dtype), self.output_pencil)
+        if self.guard != "off":
+            from repro.robustness import runner
+
+            y, report = runner.run_guarded(self, xpad, "backward")
+            return unpad_global(y, self.input_pencil), report
+        y = self.backward_padded(xpad)
         return unpad_global(y, self.input_pencil)
 
     def forward_many(self, xs):
@@ -410,12 +482,24 @@ class ParallelFFT:
                 raise ValueError(f"{direction}_many needs at least one field")
             stacked = jnp.stack([jnp.asarray(leaf).astype(dt) for leaf in leaves])
         nfields = stacked.shape[0]
-        fn = self._many_padded(nfields, direction)
-        y = fn(pad_global(stacked, in_pen, nbatch=1))
+        xpad = pad_global(stacked, in_pen, nbatch=1)
+        report = None
+        if self.guard != "off":
+            from repro.robustness import runner
+
+            if nfields == 1:  # guarded executors key nbatch off nfields
+                y, report = runner.run_guarded(self, xpad[0], direction)
+                y = y[None]
+            else:
+                y, report = runner.run_guarded(self, xpad, direction,
+                                               nfields=nfields)
+        else:
+            y = self._many_padded(nfields, direction)(xpad)
         y = unpad_global(y, out_pen, nbatch=1)
-        if treedef is None:
-            return y
-        return jax.tree_util.tree_unflatten(treedef, [y[i] for i in range(nfields)])
+        if treedef is not None:
+            y = jax.tree_util.tree_unflatten(
+                treedef, [y[i] for i in range(nfields)])
+        return y if report is None else (y, report)
 
     # -- analysis -----------------------------------------------------------
 
@@ -609,7 +693,8 @@ def _reverse_plan(stages, pencils):
     return tuple(rev_stages), tuple(rev_pencils)
 
 
-def _run_stages(block, *, stages, pencils, schedule, impl, sign, nbatch=0):
+def _run_stages(block, *, stages, pencils, schedule, impl, sign, nbatch=0,
+                guard=False):
     """Execute the plan on one shard (inside shard_map).  ``schedule`` gives
     (method, chunks, comm_dtype[, batch_fusion]) per exchange stage, in this
     plan's stage order; each exchange is emitted together with the FFT of
@@ -618,35 +703,59 @@ def _run_stages(block, *, stages, pencils, schedule, impl, sign, nbatch=0):
     for method="pipelined", per field for batch_fusion="pipelined-across-
     fields".  ``nbatch=1`` executes a stacked multi-field block: FFT stages
     transform all fields in one vectorized call and exchange stages follow
-    their schedule entry's batch_fusion mode."""
+    their schedule entry's batch_fusion mode.
+
+    ``guard=True`` additionally returns this shard's packed guard-stat
+    vector (:func:`repro.robustness.health.pack_stats`): the always-on
+    output probe, plus — only when the schedule has lossy wire stages —
+    the pre/post block-energy Parseval bracket and the per-stage
+    non-finite/saturation counters.  No collective is emitted for it —
+    the guarded executor's sharded out_spec hands the runner every
+    shard's partial and the host sums them."""
     cur = pencils[0]
+    per_stage = []
+    lossy = guard and _health.schedule_is_lossy(
+        [_sched_entry(e) for e in schedule])
+    energy_in = _health.block_energy(block) if lossy else jnp.float32(0.0)
     ex_i = i = 0
     while i < len(stages):
         st = stages[i]
         if isinstance(st, ExchangeStage):
             entry = _sched_entry(schedule[ex_i])
-            ex_i += 1
             nxt_st = stages[i + 1] if i + 1 < len(stages) else None
             fft_st = nxt_st if isinstance(nxt_st, FFTStage) and nxt_st.axis == st.w else None
-            block, used_fft = _run_exchange_stage(
+            block, used_fft, stats = _run_exchange_stage(
                 block, st, fft_st, pencils[i + 1],
                 pencils[i + 2] if fft_st is not None else None,
-                entry, impl=impl, sign=sign, nbatch=nbatch)
+                entry, impl=impl, sign=sign, nbatch=nbatch, guard=guard,
+                stage_index=ex_i)
+            ex_i += 1
+            if guard:
+                per_stage.append(stats)
             i += 2 if used_fft else 1
         else:
             block = _fft_padded_axis(block, st, cur, pencils[i + 1], impl=impl,
                                      sign=sign, nbatch=nbatch)
             i += 1
         cur = pencils[i]
-    return block
+    if not guard:
+        return block
+    energy_out = _health.block_energy(block) if lossy else jnp.float32(0.0)
+    last = stages[-1]
+    probe_axis = last.axis + nbatch if isinstance(last, FFTStage) else None
+    probe = _health.output_probe(block, probe_axis)
+    return block, _health.pack_stats(per_stage, energy_in, energy_out, probe)
 
 
 def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
                         mid: Pencil, after: Pencil | None, entry, *,
-                        impl, sign, nbatch):
+                        impl, sign, nbatch, guard=False, stage_index=None):
     """One exchange stage (+ the FFT of its newly-aligned axis, when
     ``fft_st`` is given), under one ``(method, chunks, comm_dtype,
-    batch_fusion)`` schedule entry.  Returns ``(block, used_fft)``.
+    batch_fusion)`` schedule entry.  Returns ``(block, used_fft, stats)``
+    where ``stats`` is the stage's guard-counter dict (None unless
+    ``guard``).  The fault-injection taps are free no-ops without an armed
+    :class:`repro.robustness.FaultPlan`.
 
     batch_fusion (stacked ``nbatch=1`` blocks only):
 
@@ -660,54 +769,73 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
         exchange+FFT pairs (the baseline loop, inside one jit).
     """
     method, chunks, comm_dtype, fusion = entry
-    if nbatch and fusion != "stacked":
-        nf = block.shape[0]
-        fields = [jax.lax.index_in_dim(block, f, axis=0, keepdims=False)
-                  for f in range(nf)]
+    with _faults.stage_context(stage_index, method, comm_dtype):
+        _faults.check_compile(method, comm_dtype)
+        block = _faults.tap_stage_input(block)
+        if nbatch and fusion != "stacked":
+            nf = block.shape[0]
+            fields = [jax.lax.index_in_dim(block, f, axis=0, keepdims=False)
+                      for f in range(nf)]
+            stats = _health.zero_stats() if guard else None
 
-        def do_exchange(fb):
-            return exchange_shard(fb, ex.v, ex.w, ex.group, method=method,
-                                  chunks=chunks, comm_dtype=comm_dtype)
+            def do_exchange(fb):
+                nonlocal stats
+                r = exchange_shard(fb, ex.v, ex.w, ex.group, method=method,
+                                   chunks=chunks, comm_dtype=comm_dtype,
+                                   guard=guard)
+                if guard:
+                    r, s = r
+                    stats = _health.add_stats(stats, s)
+                return r
 
-        def do_fft(fb):
-            if fft_st is None:
-                return fb
-            return _fft_padded_axis(fb, fft_st, mid, after, impl=impl, sign=sign)
+            def do_fft(fb):
+                if fft_st is None:
+                    return fb
+                return _fft_padded_axis(fb, fft_st, mid, after, impl=impl, sign=sign)
 
-        outs = []
-        if fusion == "per-field":
-            for fb in fields:
-                if fft_st is not None and method == "pipelined" and chunks > 1:
-                    outs.append(_exchange_then_fft(
-                        fb, ex, fft_st, mid, after, chunks=chunks,
-                        comm_dtype=comm_dtype, impl=impl, sign=sign))
-                else:
-                    outs.append(do_fft(do_exchange(fb)))
-        else:  # pipelined-across-fields
-            exchanged = []
-            for f, fb in enumerate(fields):
-                exchanged.append(do_exchange(fb))
-                if f:  # field f's collective emitted before field f-1's FFT
-                    outs.append(do_fft(exchanged[f - 1]))
-            outs.append(do_fft(exchanged[-1]))
-        return jnp.stack(outs), fft_st is not None
+            outs = []
+            if fusion == "per-field":
+                for fb in fields:
+                    if fft_st is not None and method == "pipelined" and chunks > 1:
+                        r = _exchange_then_fft(
+                            fb, ex, fft_st, mid, after, chunks=chunks,
+                            comm_dtype=comm_dtype, impl=impl, sign=sign,
+                            guard=guard)
+                        if guard:
+                            r, s = r
+                            stats = _health.add_stats(stats, s)
+                        outs.append(r)
+                    else:
+                        outs.append(do_fft(do_exchange(fb)))
+            else:  # pipelined-across-fields
+                exchanged = []
+                for f, fb in enumerate(fields):
+                    exchanged.append(do_exchange(fb))
+                    if f:  # field f's collective emitted before field f-1's FFT
+                        outs.append(do_fft(exchanged[f - 1]))
+                outs.append(do_fft(exchanged[-1]))
+            return jnp.stack(outs), fft_st is not None, stats
 
-    if fft_st is not None and method == "pipelined" and chunks > 1:
-        block = _exchange_then_fft(block, ex, fft_st, mid, after, chunks=chunks,
-                                   comm_dtype=comm_dtype, impl=impl, sign=sign,
-                                   nbatch=nbatch)
-        return block, True
-    block = exchange_shard(block, ex.v, ex.w, ex.group, method=method,
-                           chunks=chunks, comm_dtype=comm_dtype, nbatch=nbatch)
-    if fft_st is not None:
-        block = _fft_padded_axis(block, fft_st, mid, after, impl=impl, sign=sign,
-                                 nbatch=nbatch)
-    return block, fft_st is not None
+        if fft_st is not None and method == "pipelined" and chunks > 1:
+            res = _exchange_then_fft(block, ex, fft_st, mid, after,
+                                     chunks=chunks, comm_dtype=comm_dtype,
+                                     impl=impl, sign=sign, nbatch=nbatch,
+                                     guard=guard)
+            block, stats = res if guard else (res, None)
+            return block, True, stats
+        res = exchange_shard(block, ex.v, ex.w, ex.group, method=method,
+                             chunks=chunks, comm_dtype=comm_dtype,
+                             nbatch=nbatch, guard=guard)
+        block, stats = res if guard else (res, None)
+        if fft_st is not None:
+            block = _fft_padded_axis(block, fft_st, mid, after, impl=impl,
+                                     sign=sign, nbatch=nbatch)
+        return block, fft_st is not None, stats
 
 
 def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
                        mid: Pencil, after: Pencil, *, chunks, impl, sign,
-                       comm_dtype=None, nbatch=0):
+                       comm_dtype=None, nbatch=0, guard=False):
     """Pipelined exchange fused with the next stage's 1-D FFT: issue the
     per-slice all-to-alls interleaved with the per-slice transforms.  Each
     slice is a disjoint v-subrange of the fused output, so slicing commutes
@@ -716,11 +844,14 @@ def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
     for bf16/int8 since slices quantize independently); the payoff is that
     XLA may run slice i+1's collective DMA under slice i's FFT compute.
     With ``nbatch=1`` each slice carries every field's sub-range."""
-    pieces = exchange_shard_sliced(block, ex.v, ex.w, ex.group, chunks=chunks,
-                                   comm_dtype=comm_dtype, nbatch=nbatch)
+    res = exchange_shard_sliced(block, ex.v, ex.w, ex.group, chunks=chunks,
+                                comm_dtype=comm_dtype, nbatch=nbatch,
+                                guard=guard)
+    pieces, stats = res if guard else (res, None)
     out = [_fft_padded_axis(p, fft_st, mid, after, impl=impl, sign=sign, nbatch=nbatch)
            for p in pieces]
-    return out[0] if len(out) == 1 else jnp.concatenate(out, axis=ex.v + nbatch)
+    out = out[0] if len(out) == 1 else jnp.concatenate(out, axis=ex.v + nbatch)
+    return (out, stats) if guard else out
 
 
 def _fft_padded_axis(block, st: FFTStage, cur: Pencil, nxt: Pencil, *, impl, sign, nbatch=0):

@@ -77,7 +77,8 @@ def wire_ratio(comm_dtype) -> int:
 # ---------------------------------------------------------------------------
 
 
-def quantize_int8(x: jax.Array, *, block_axis: int | tuple[int, ...] = 0):
+def quantize_int8(x: jax.Array, *, block_axis: int | tuple[int, ...] = 0,
+                  scale_div=None, with_stats: bool = False):
     """Symmetric per-block int8 quantization of an f32 array.
 
     One scale per index combination of the ``block_axis`` axis (or axes —
@@ -87,14 +88,39 @@ def quantize_int8(x: jax.Array, *, block_axis: int | tuple[int, ...] = 0):
     Returns ``(q, scale)`` with ``q`` int8 of ``x.shape`` and ``scale`` f32
     keeping the block axes' extents and 1 elsewhere (keepdims layout,
     broadcastable against ``q``).
+
+    Non-finite inputs are *sanitized*: a NaN/Inf element would otherwise
+    poison the block's max-abs, making the scale (and so every dequantized
+    element of the block) NaN.  The max-abs is taken over the finite
+    elements only and non-finite elements quantize to 0 — the corruption
+    stays local to the bad elements and is reported, not amplified.  Pass
+    ``with_stats=True`` to additionally get ``{"nonfinite", "saturated"}``
+    f32 scalar counts (the runtime-guard hook: saturation rides the clip
+    the codec already does, costing no extra HBM pass).
+
+    ``scale_div`` (fault injection only) divides the scale, forcing
+    saturation — see :mod:`repro.robustness.faults`.
     """
     axes = (block_axis,) if isinstance(block_axis, int) else tuple(block_axis)
     axes = tuple(a % x.ndim for a in axes)
     red = tuple(i for i in range(x.ndim) if i not in axes)
-    amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    finite = jnp.isfinite(x)
+    xf = jnp.where(finite, x, 0.0)
+    amax = jnp.max(jnp.abs(xf), axis=red, keepdims=True)
     scale = jnp.maximum(amax, _EPS) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    if scale_div is not None:
+        scale = scale / scale_div
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    scale = scale.astype(jnp.float32)
+    if not with_stats:
+        return q, scale
+    stats = {
+        "nonfinite": jnp.sum(~finite, dtype=jnp.float32),
+        # |q| == 127 without an int32 cast: a convert out of int8 here
+        # would unbalance planlint's PLAN006 quantize/dequantize pairing
+        "saturated": jnp.sum((q == 127) | (q == -127), dtype=jnp.float32),
+    }
+    return q, scale, stats
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:

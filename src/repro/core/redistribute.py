@@ -95,6 +95,7 @@ from repro.core.decomp import local_lengths
 from repro.core.meshutil import axis_size as _mesh_axis_size, shard_map
 from repro.core.pencil import Group, Pencil, group_names, group_size
 from repro.core.quant import canonical_comm_dtype, wire_ratio
+from repro.robustness import faults as _faults, health as _health
 
 Method = str  # "fused" | "traditional" | "pipelined"
 CommDtype = str  # "complex64" | "bf16" | "int8" (None accepted as complex64)
@@ -111,6 +112,7 @@ def _all_to_all_comm(
     concat_axis: int,
     comm_dtype: CommDtype | None = None,
     batch_axes: tuple[int, ...] = (),
+    guard: bool = False,
 ) -> jax.Array:
     """``lax.all_to_all(..., tiled=True)`` with an optional reduced-precision
     wire payload (the comm-compression core all three engines share).
@@ -128,21 +130,36 @@ def _all_to_all_comm(
     batch-oblivious, but the int8 codec blocks its scales per (field,
     destination chunk) so fields of different magnitude never share one
     max-abs — the scale all-to-all ships ``m × prod(batch extents)`` f32s.
+
+    ``guard=True`` additionally returns per-payload health stats (see
+    :mod:`repro.robustness.health`) riding the codec's existing reductions:
+    the return becomes ``(out, {"nonfinite", "saturated"})``.  Only the
+    lossy codecs scan their payload — a complex64 exchange returns zero
+    counters at zero traced cost, because any non-finite it ships
+    propagates through the remaining stages into the executor's
+    output-energy guard (detection is global there, not per-stage).  The
+    fault taps (:mod:`repro.robustness.faults`) trace zero ops unless a
+    FaultPlan is armed, so an unguarded exchange compiles bit-identically.
     """
     d = canonical_comm_dtype(comm_dtype)
     if d == "complex64":
-        return lax.all_to_all(y, axis_name, split_axis=split_axis,
-                              concat_axis=concat_axis, tiled=True)
+        stats = _health.zero_stats() if guard else None
+        out = lax.all_to_all(y, axis_name, split_axis=split_axis,
+                             concat_axis=concat_axis, tiled=True)
+        out = _faults.tap_wire(out, "payload")
+        return (out, stats) if guard else out
     iscomplex = jnp.iscomplexobj(y)
     planes = quant.complex_to_planes(y) if iscomplex else y[None].astype(jnp.float32)
     sa, ca = split_axis + 1, concat_axis + 1
     ba = tuple(b + 1 for b in batch_axes)  # planes coords
 
     if d == "bf16":
+        stats = _health.payload_stats(planes) if guard else None
         p = lax.all_to_all(quant.encode_bf16(planes), axis_name,
                            split_axis=sa, concat_axis=ca, tiled=True)
-        p = quant.decode_bf16(p)
-        return quant.planes_to_complex(p) if iscomplex else p[0]
+        p = quant.decode_bf16(_faults.tap_wire(p, "payload"))
+        out = quant.planes_to_complex(p) if iscomplex else p[0]
+        return (out, stats) if guard else out
 
     # int8: one scale per (field, destination chunk) of the split axis.
     m = _axis_size(axis_name)
@@ -154,19 +171,28 @@ def _all_to_all_comm(
     # block axes in view coords: the m-chunk axis plus every batch axis
     # (axes past the inserted nv//m axis shift right by one)
     block_axes = (sa,) + tuple(b if b < sa else b + 1 for b in ba)
-    q, scale = quant.quantize_int8(planes.reshape(view), block_axis=block_axes)
+    qargs = dict(block_axis=block_axes, scale_div=_faults.scale_div())
+    if guard:
+        q, scale, stats = quant.quantize_int8(planes.reshape(view),
+                                              with_stats=True, **qargs)
+    else:
+        q, scale = quant.quantize_int8(planes.reshape(view), **qargs)
+        stats = None
     q = q.reshape(planes.shape)
     # scale keepdims (view coords) -> planes coords: drop the nv//m axis
     s = scale.reshape([e for i, e in enumerate(scale.shape) if i != sa + 1])
     qx = lax.all_to_all(q, axis_name, split_axis=sa, concat_axis=ca, tiled=True)
     sx = lax.all_to_all(s, axis_name, split_axis=sa, concat_axis=ca, tiled=True)
+    qx = _faults.tap_wire(qx, "payload")
+    sx = _faults.tap_wire(sx, "scale")
     # received chunk j along the concat axis was quantized with sender j's
     # scale: view ca as (m, ca_out/m) and broadcast sx over the chunk
     out_view = list(qx.shape)
     out_view[ca : ca + 1] = [m, qx.shape[ca] // m]
     dq = quant.dequantize_int8(qx.reshape(out_view), jnp.expand_dims(sx, ca + 1))
     p = dq.reshape(qx.shape)
-    return quant.planes_to_complex(p) if iscomplex else p[0]
+    out = quant.planes_to_complex(p) if iscomplex else p[0]
+    return (out, stats) if guard else out
 
 
 def exchange_shard(
@@ -180,6 +206,7 @@ def exchange_shard(
     transposed_out: bool = False,
     comm_dtype: CommDtype | None = None,
     nbatch: int = 0,
+    guard: bool = False,
 ) -> jax.Array:
     """Per-shard v→w exchange over mesh subgroup ``group``.
 
@@ -197,6 +224,9 @@ def exchange_shard(
     *field-relative* and the one collective ships every field's payload —
     the batched multi-field entry point.  With ``transposed_out=True`` the
     chunk axis still comes out leading (before the batch axes).
+
+    ``guard=True`` returns ``(out, stats)`` with this exchange's fused
+    health counters (see :func:`_all_to_all_comm`).
     """
     if v == w:
         raise ValueError("exchange requires v != w (paper Alg. 3)")
@@ -209,12 +239,16 @@ def exchange_shard(
         # The paper's method: one generalized all-to-all; the split/concat
         # axes are the "subarray datatype" description.
         return _all_to_all_comm(block, axis_name, split_axis=bv, concat_axis=bw,
-                                comm_dtype=comm_dtype, batch_axes=batch_axes)
+                                comm_dtype=comm_dtype, batch_axes=batch_axes,
+                                guard=guard)
 
     if method == "pipelined":
-        pieces = exchange_shard_sliced(block, v, w, group, chunks=chunks,
-                                       comm_dtype=comm_dtype, nbatch=nbatch)
-        return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=bv)
+        r = exchange_shard_sliced(block, v, w, group, chunks=chunks,
+                                  comm_dtype=comm_dtype, nbatch=nbatch,
+                                  guard=guard)
+        pieces, stats = r if guard else (r, None)
+        out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=bv)
+        return (out, stats) if guard else out
 
     if method == "traditional":
         m = _axis_size(axis_name)
@@ -229,19 +263,21 @@ def exchange_shard(
         # local transpose (the costly pack step traditional codes pay for).
         y = jnp.moveaxis(y, bv, 0)
         # Eq. (17)+ALLTOALL: contiguous exchange on the leading chunk axis.
-        y = _all_to_all_comm(y, axis_name, split_axis=0, concat_axis=0,
+        r = _all_to_all_comm(y, axis_name, split_axis=0, concat_axis=0,
                              comm_dtype=comm_dtype,
-                             batch_axes=tuple(b + 1 for b in batch_axes))
+                             batch_axes=tuple(b + 1 for b in batch_axes),
+                             guard=guard)
+        y, stats = r if guard else (r, None)
         # Unpack: leading chunk q now carries peer q's w-shard (global w order).
         if transposed_out:
             # FFTW "transposed out": keep chunk-major layout, caller handles it.
-            return y
+            return (y, stats) if guard else y
         # Insert the chunk axis just before w (chunk-major == global w order)
         # and merge (m, w_shard) -> w_full: the second materialized copy.
         z = jnp.moveaxis(y, 0, bw)
         shape = list(z.shape)
         shape[bw : bw + 2] = [shape[bw] * shape[bw + 1]]
-        return z.reshape(shape)
+        return (z.reshape(shape), stats) if guard else z.reshape(shape)
 
     raise ValueError(f"unknown method {method!r}")
 
@@ -255,6 +291,7 @@ def exchange_shard_sliced(
     chunks: int,
     comm_dtype: CommDtype | None = None,
     nbatch: int = 0,
+    guard: bool = False,
 ) -> list[jax.Array]:
     """The fused v→w exchange as ``chunks`` independent per-slice
     all-to-alls (the ``pipelined`` engine).
@@ -274,6 +311,9 @@ def exchange_shard_sliced(
     ``nbatch`` leading batch axes ride along whole in every slice
     (``v``/``w`` field-relative, as in :func:`exchange_shard`): each slice
     is still one collective carrying all fields' sub-range.
+
+    ``guard=True`` returns ``(pieces, stats)``: one stats dict summed over
+    all slices (each slice's codec counters added together).
     """
     names = group_names(group)
     axis_name = names[0] if len(names) == 1 else names
@@ -290,18 +330,24 @@ def exchange_shard_sliced(
     y = block.reshape(shape)
     w_eff = bw if bw < bv else bw + 1
     pieces = []
+    stats = _health.zero_stats() if guard else None
     off = 0
     for n in sizes:
         piece = lax.slice_in_dim(y, off, off + n, axis=bv + 1)
         off += n
-        p = _all_to_all_comm(piece, axis_name, split_axis=bv, concat_axis=w_eff,
+        r = _all_to_all_comm(piece, axis_name, split_axis=bv, concat_axis=w_eff,
                              comm_dtype=comm_dtype,
-                             batch_axes=tuple(range(nbatch)))
+                             batch_axes=tuple(range(nbatch)), guard=guard)
+        if guard:
+            p, s = r
+            stats = _health.add_stats(stats, s)
+        else:
+            p = r
         # p's m-factor axis now has extent 1: merge (1, n) -> (n,)
         pshape = list(p.shape)
         pshape[bv : bv + 2] = [n]
         pieces.append(p.reshape(pshape))
-    return pieces
+    return (pieces, stats) if guard else pieces
 
 
 def _axis_size(axis_name) -> int:

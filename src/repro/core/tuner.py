@@ -26,20 +26,27 @@ This module micro-benchmarks each candidate on the stage's real shapes (the
 exchange plus the 1-D FFT it feeds, so overlap is priced in) and caches the
 winning schedule on disk.
 
-Cache schema v4: each entry maps a :func:`plan_key` — mesh shape, global
+Cache schema v5: each entry maps a :func:`plan_key` — mesh shape, global
 shape, grid, the per-axis transform tags (so a dealiased/pruned or DCT plan
 never collides with the plain c2c plan of the same shape), impl, backend
 *and device kind* (so timings from different TPU generations under the same
 ``backend`` string never collide), **the batch size** (``nfields`` — a
 3-field schedule must never be replayed for a 16-field execution), the
-candidate set, and ``schema: 4`` — to ``{"schedule": [[method, chunks,
+candidate set, and ``schema: 5`` — to ``{"schedule": [[method, chunks,
 comm_dtype(, batch_fusion)], ...], "timings": {...}}`` (4-field entries for
-``nfields > 1``).  v1–v3 entries (no transforms/nfields field / older
+``nfields > 1``).  v5 adds per-entry health marks: :func:`quarantine` sets
+``entry["bad"] = {"reason": ...}`` (and bumps ``entry["quarantines"]``)
+when a guarded execution catches the entry's schedule failing at runtime;
+a marked entry is never replayed — :func:`_parse_entry` rejects it, forcing
+a retune whose fresh timings (under whatever fault made the old winner
+lose) replace the mark.  v1–v4 entries (no transforms/nfields field / older
 schema tags) have incompatible keys and are simply never matched; stale
 entries are harmless and a corrupt or non-dict cache file is silently
 treated as empty and rewritten — a stale cache must never raise.  Writes
-are atomic (temp file + ``os.replace``) so concurrent benchmark workers
-sharing a cache cannot interleave partial JSON.
+are atomic (temp file + ``os.replace``) and **merge** by default: the
+writer re-reads the file and overlays only its own keys, so concurrent
+workers tuning *different* plans no longer clobber each other's entries
+(last-writer-wins now applies per key, not per file).
 
 Cache location: ``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/fft_tuner.json``;
 an in-process memo avoids re-reading the file per plan.
@@ -61,7 +68,11 @@ from repro.core.quant import canonical_comm_dtype
 from repro.core.redistribute import BATCH_FUSIONS, PIPELINE_CHUNK_CANDIDATES
 
 #: cache schema version (bump when the key or entry layout changes)
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
+
+#: how many times a guarded execution may quarantine-and-retune one cache
+#: entry before the runner gives up and raises (see repro.robustness.runner)
+MAX_QUARANTINE_RETUNES = 3
 
 #: (method, chunks) engine candidates benchmarked per exchange stage
 ENGINE_CANDIDATES: tuple[tuple[str, int], ...] = (
@@ -160,13 +171,22 @@ def load_cache(path: Path) -> dict:
     return data if isinstance(data, dict) else {}
 
 
-def save_cache(path: Path, data: dict) -> bool:
-    """Atomically replace the cache file: write a temp file in the same
-    directory, then ``os.replace`` — concurrent benchmark workers can race
-    on last-writer-wins but can never interleave partial JSON."""
+def save_cache(path: Path, data: dict, *, merge: bool = True) -> bool:
+    """Atomically write cache entries: write a temp file in the same
+    directory, then ``os.replace`` — readers can never observe partial
+    JSON.  With ``merge=True`` (default) the writer first re-reads the file
+    and overlays only the keys in ``data``, so a worker that tuned plan A
+    no longer erases the entry a concurrent worker just wrote for plan B
+    (the pre-v5 last-writer-wins clobber); racing writers of the *same*
+    key still last-write-wins, which is benign — both hold valid timings.
+    ``merge=False`` replaces the whole file (tests / explicit resets)."""
     try:
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
+        if merge:
+            current = load_cache(path)
+            current.update(data)
+            data = current
         fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
@@ -205,10 +225,35 @@ def get_or_tune(plan, *, cache_path: str | None = None,
                          candidates=candidates)
     if sched is None:
         sched, timings = tune_plan(plan, candidates=candidates, nfields=nfields)
-        disk[key] = {"schedule": [list(s) for s in sched], "timings": timings}
-        save_cache(path, disk)
+        entry = {"schedule": [list(s) for s in sched], "timings": timings}
+        prev = disk.get(key)
+        if isinstance(prev, dict) and prev.get("quarantines"):
+            # retune after a quarantine: clear the bad mark, keep the count
+            # so a still-failing entry eventually exhausts the runner's cap
+            entry["quarantines"] = int(prev["quarantines"])
+        save_cache(path, {key: entry})  # delta write: merge keeps other plans
     _MEMO[memo_key] = sched
     return sched
+
+
+def quarantine(path, key: str, reason: str) -> int:
+    """Mark the cache entry at ``key`` bad (a guarded execution caught its
+    schedule failing at runtime): the entry stops parsing, so the next
+    schedule resolve retunes.  Bumps and returns the entry's lifetime
+    quarantine count; also drops the in-process memos — including the
+    stage-timing memo, which may hold the faulted candidate's healthy-run
+    timings — so the retune actually re-measures."""
+    disk = load_cache(path)
+    entry = disk.get(key)
+    if not isinstance(entry, dict):
+        entry = {}
+    entry["bad"] = {"reason": reason}
+    entry["quarantines"] = int(entry.get("quarantines", 0)) + 1
+    save_cache(path, {key: entry})
+    for k in [k for k in _MEMO if k.endswith("|" + key)]:
+        del _MEMO[k]
+    _STAGE_MEMO.clear()
+    return entry["quarantines"]
 
 
 def _parse_entry(entry, n_exchanges: int, want_len: int, candidates=None):
@@ -221,7 +266,12 @@ def _parse_entry(entry, n_exchanges: int, want_len: int, candidates=None):
     member of that *live* candidate set: an entry naming an engine, chunk
     count, payload or fusion that has since been dropped from the sweep
     (e.g. a hand-edited chunks=16 after ``PIPELINE_CHUNK_CANDIDATES``
-    shrank) is a retune, not a schedule the executor should replay."""
+    shrank) is a retune, not a schedule the executor should replay.
+
+    A quarantined entry (``entry["bad"]`` set, see :func:`quarantine`)
+    never parses either — that is the whole point of the mark."""
+    if not isinstance(entry, dict) or entry.get("bad"):
+        return None
     try:
         raw = entry["schedule"]
         sched = tuple((str(e[0]), int(e[1]), *(str(x) for x in e[2:])) for e in raw)
@@ -303,7 +353,7 @@ def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str,
     entry = (method, chunks, comm_dtype, batch_fusion)
 
     def run(block):
-        out, _ = _run_exchange_stage(
+        out, _, _ = _run_exchange_stage(
             block, st, follow if has_fft else None, plan.pencil_trace[si + 1],
             out_pen if has_fft else None, entry, impl=plan.impl,
             sign=fftcore.FORWARD, nbatch=nbatch)

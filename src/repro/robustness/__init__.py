@@ -1,0 +1,27 @@
+"""Guarded execution for ParallelFFT: fused runtime health checks, fault
+injection, and a graceful precision/engine degradation ladder.
+
+* :mod:`repro.robustness.health` — traced guard statistics + HealthReport.
+* :mod:`repro.robustness.faults` — the FaultPlan injection harness.
+* :mod:`repro.robustness.runner` — strict/degrade execution loop.
+
+This ``__init__`` stays import-light (no :mod:`repro.core` import): the
+plan executor imports :mod:`.faults`/:mod:`.health` at module scope, so a
+runner import here would be circular.  ``GuardError``/``run_guarded``
+resolve lazily.
+"""
+
+from repro.robustness.faults import FaultInjected, FaultPlan  # noqa: F401
+from repro.robustness.health import (  # noqa: F401
+    GUARD_MODES, HealthReport, StageHealth)
+
+__all__ = ["FaultInjected", "FaultPlan", "GUARD_MODES", "HealthReport",
+           "StageHealth", "GuardError", "run_guarded"]
+
+
+def __getattr__(name):
+    if name in ("GuardError", "run_guarded"):
+        from repro.robustness import runner
+
+        return getattr(runner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,6 +1,6 @@
 """Exchange-schedule autotuner: candidate sweep (engines × comm_dtype
-payloads × batch fusions), schema-v4 disk cache round-trip, stale-cache
-migration, atomic writes."""
+payloads × batch fusions), schema-v5 disk cache round-trip, stale-cache
+migration, atomic merge writes, quarantine marks."""
 
 import json
 import threading
@@ -96,11 +96,11 @@ print("BUDGET CACHE OK", json.dumps([list(s) for s in sched]))
 
 
 def test_stale_or_corrupt_cache_ignored_and_rewritten(subproc, tmp_path):
-    """Cache migration (PR 4 satellite): a schema-v3 (or corrupt) cache
+    """Cache migration (PR 4 satellite): a stale-schema (or corrupt) cache
     file dropped in the cache path before ``method="auto"`` must be
-    silently ignored and rewritten with a valid schema-v4 entry — never
-    raise.  Covers: invalid JSON, a JSON non-dict, a stale v3-style entry
-    set, and a matching v4 key whose entry body is malformed."""
+    silently ignored and rewritten with a valid current-schema entry —
+    never raise.  Covers: invalid JSON, a JSON non-dict, a stale v3-style
+    entry set, and a matching current key whose entry body is malformed."""
     cache = tmp_path / "fft_tuner.json"
     code = f"""
 import json
@@ -127,7 +127,7 @@ for payload in stale_payloads:
     disk = json.loads(cache.read_text())  # rewritten as valid JSON
     key = tuner.plan_key(plan)
     assert key in disk
-    assert json.loads(key)["schema"] == tuner.SCHEMA_VERSION == 4
+    assert json.loads(key)["schema"] == tuner.SCHEMA_VERSION == 5
     print("ok", payload[:30])
 
 # a *matching* v4 key whose entry body is junk must also fall back to
