@@ -34,10 +34,14 @@ PEAK, HBM, ICI = 197e12, 819e9, 50e9
 def lower_fft(shape, mesh_shape, axis_names, grid, *, real, method, impl="jnp"):
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ParallelFFT
+    from repro.core.planconfig import PlanConfig
     from repro.launch.hlo_account import account
 
     mesh = make_mesh(mesh_shape, axis_names)
-    plan = ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl)
+    # real=True spelled as an explicit transform list (r2c on the last axis)
+    transforms = (("c2c",) * (len(shape) - 1) + ("r2c",)) if real else None
+    plan = ParallelFFT(mesh, shape, grid, transforms=transforms,
+                       config=PlanConfig(method=method, impl=impl))
     dtype = jnp.float32 if real else jnp.complex64
     x = jax.ShapeDtypeStruct(plan.input_pencil.physical, dtype)
 
@@ -67,13 +71,15 @@ def lower_fft(shape, mesh_shape, axis_names, grid, *, real, method, impl="jnp"):
         # what the same plan would cost with the pipelined exchange engine
         "model_time_s": 2 * plan.model_time_s(itemsize=8),
         "model_time_pipelined_s": 2 * ParallelFFT(
-            mesh, shape, grid, real=real, method="pipelined",
-            impl=impl).model_time_s(itemsize=8),
+            mesh, shape, grid, transforms=transforms,
+            config=PlanConfig(method="pipelined", impl=impl),
+        ).model_time_s(itemsize=8),
         # comm-compression lever: same pipelined plan with bf16 wire payloads
         # (2x fewer ICI bytes, priced against the extra quant HBM passes)
         "model_time_pipelined_bf16_s": 2 * ParallelFFT(
-            mesh, shape, grid, real=real, method="pipelined", impl=impl,
-            comm_dtype="bf16").model_time_s(itemsize=8),
+            mesh, shape, grid, transforms=transforms,
+            config=PlanConfig(method="pipelined", impl=impl, comm_dtype="bf16"),
+        ).model_time_s(itemsize=8),
         "comm_model_bytes_per_dev_bf16": 2 * plan.comm_bytes_per_device(
             8, comm_dtype="bf16"),
     }

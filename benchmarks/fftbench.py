@@ -9,7 +9,10 @@ outers of 3").  ``--measure redistribution`` times an exchanges-only plan
 pipelined, auto} × every ``--comm-dtypes`` wire payload {complex64, bf16,
 int8} on the same problem and reports one JSON table with a ``comm_dtype``
 column per row (pass ``--tune-cache`` so the auto schedules round-trip to
-disk).
+disk).  ``--exchange-impls jnp,pallas`` adds fused-exchange-kernel rows
+(``method@dtype@pallas``) for every lossy payload; lossless payloads get
+no pallas row because the fused kernels don't apply there and the plan
+would be identical.
 
 ``--fields N`` (N > 1) benchmarks the batched multi-field path: every
 timed transform runs N stacked fields through one plan invocation, the
@@ -36,9 +39,10 @@ import numpy as np
 
 def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
                comm_dtype=None, tuner_cache=None, transforms=None,
-               batch_fusion="stacked"):
+               batch_fusion="stacked", exchange_impl="jnp"):
     from repro.core.meshutil import make_mesh
     from repro.core.pfft import ParallelFFT
+    from repro.core.planconfig import PlanConfig
 
     if gridspec == "slab":
         mesh = make_mesh((ndev,), ("p0",))
@@ -62,14 +66,15 @@ def build_plan(shape, gridspec, ndev, *, real, method, impl, chunks=4,
         grid = ("p0", "p1", "p2")
     else:
         raise ValueError(gridspec)
-    if transforms:
-        return ParallelFFT(mesh, shape, grid, transforms=transforms,
-                           method=method, impl=impl, chunks=chunks,
-                           comm_dtype=comm_dtype, tuner_cache=tuner_cache,
-                           batch_fusion=batch_fusion)
-    return ParallelFFT(mesh, shape, grid, real=real, method=method, impl=impl,
-                       chunks=chunks, comm_dtype=comm_dtype,
-                       tuner_cache=tuner_cache, batch_fusion=batch_fusion)
+    if not transforms and real:
+        # --real sugar, spelled as an explicit transform list (the real=
+        # ParallelFFT kwarg is deprecated)
+        transforms = ("c2c",) * (len(shape) - 1) + ("r2c",)
+    cfg = PlanConfig(method=method, impl=impl, exchange_impl=exchange_impl,
+                     chunks=chunks, comm_dtype=comm_dtype,
+                     batch_fusion=batch_fusion, tuner_cache=tuner_cache)
+    return ParallelFFT(mesh, shape, grid, config=cfg,
+                       transforms=transforms or None)
 
 
 def exchanges_only(plan, *, nfields=1, batch_fusion="stacked"):
@@ -101,19 +106,20 @@ def exchanges_only(plan, *, nfields=1, batch_fusion="stacked"):
             want = (nfields,) * nbatch + tuple(np.array(before.local_shape))
             if block.shape != want or block.dtype != dtype:
                 block = jnp.zeros(want, dtype)
-            method, chunks, comm_dtype = schedule[ex_i]
+            method, chunks, comm_dtype, ex_impl, _fusion = schedule[ex_i]
             if nbatch and batch_fusion != "stacked":
                 # per-field and pipelined-across-fields both issue N
                 # per-field collectives here (no FFTs to interleave with)
                 block = jnp.stack([
                     exchange_shard(block[f], st.v, st.w, st.group,
                                    method=method, chunks=chunks,
-                                   comm_dtype=comm_dtype)
+                                   comm_dtype=comm_dtype, impl=ex_impl)
                     for f in range(nfields)])
             else:
                 block = exchange_shard(block, st.v, st.w, st.group,
                                        method=method, chunks=chunks,
-                                       comm_dtype=comm_dtype, nbatch=nbatch)
+                                       comm_dtype=comm_dtype, impl=ex_impl,
+                                       nbatch=nbatch)
         return block
 
     first, first_dtype = stages[0][1], stages[0][3]
@@ -278,6 +284,14 @@ def main(argv=None):
                          "dct2, dct3, dst2, dst3), overriding --real; e.g. "
                          "--transforms dct2,c2c,r2c")
     ap.add_argument("--impl", default="jnp")
+    ap.add_argument("--exchange-impl", choices=["jnp", "pallas"], default="jnp",
+                    help="exchange-local pack/codec implementation: 'pallas' "
+                         "runs the fused quantize+pack / unpack+dequantize "
+                         "kernels on lossy payloads (auto: candidate budget)")
+    ap.add_argument("--exchange-impls", type=str, default="jnp",
+                    help="comma list of exchange impls the --compare sweep "
+                         "covers; pallas rows appear only where the fused "
+                         "kernels apply (lossy payloads)")
     ap.add_argument("--inner", type=int, default=3)
     ap.add_argument("--outer", type=int, default=10)
     ap.add_argument("--measure", choices=["total", "redistribution"], default="total")
@@ -300,44 +314,55 @@ def main(argv=None):
                "backend": jax.default_backend(), "methods": {}}
         fusions = (["stacked", "pipelined-across-fields", "per-field"]
                    if args.fields > 1 else ["stacked"])
-        for method in METHODS:
-            for comm_dtype in args.comm_dtypes.split(","):
-                for fusion in fusions:
-                    plan = build_plan(shape, args.grid, ndev, real=args.real,
-                                      method=method, impl=args.impl,
-                                      chunks=args.chunks, comm_dtype=comm_dtype,
-                                      tuner_cache=args.tune_cache,
-                                      transforms=transforms, batch_fusion=fusion)
-                    if not out["methods"]:
-                        # the workload's true input kind, once from the first
-                        # plan (a --transforms plan can be real without --real)
-                        out["real"] = bool(plan.input_dtype == jnp.float32)
-                    sched = (plan.batched_schedule(args.fields)
-                             if args.fields > 1 else plan.schedule)
-                    tag = (f"{method}@{comm_dtype}@{fusion}"
-                           if args.fields > 1 else f"{method}@{comm_dtype}")
-                    out["methods"][tag] = {
-                        "comm_dtype": comm_dtype,
-                        "batch_fusion": fusion if args.fields > 1 else None,
-                        "best_s": _time_plan(plan, shape, args),
-                        "schedule": [list(s) for s in sched],
-                        # itemsize=None prices each exchange at its traced
-                        # dtype width (complex64 after the r2c stage, f32 for
-                        # exchanges of still-real dct/dst data)
-                        "model_time_s": plan.model_time_s(
-                            itemsize=None, nfields=args.fields),
-                        "wire_bytes_per_dev": plan.comm_bytes_per_device(
-                            None, nfields=args.fields),
-                        # static certification of the timed artifact: the
-                        # row's numbers are meaningless if the compiled plan
-                        # doesn't match its claimed schedule
-                        "audit": None if args.no_audit
-                        else plan.audit(nfields=args.fields).summary(),
-                    }
-                    if args.fields > 1 and method == "auto":
-                        # one fusion pass suffices: auto tunes batch_fusion
-                        # per stage itself, so the plan's own mode is moot
-                        break
+        from repro.kernels.exchange import pallas_applicable
+
+        # pallas rows only where the fused kernels apply (lossy payloads);
+        # elsewhere the plan is identical to the jnp row
+        rows = [(m, d, x) for m in METHODS
+                for d in args.comm_dtypes.split(",")
+                for x in args.exchange_impls.split(",")
+                if x == "jnp" or pallas_applicable(m, d)]
+        for method, comm_dtype, ximpl in rows:
+            for fusion in fusions:
+                plan = build_plan(shape, args.grid, ndev, real=args.real,
+                                  method=method, impl=args.impl,
+                                  chunks=args.chunks, comm_dtype=comm_dtype,
+                                  tuner_cache=args.tune_cache,
+                                  transforms=transforms, batch_fusion=fusion,
+                                  exchange_impl=ximpl)
+                if not out["methods"]:
+                    # the workload's true input kind, once from the first
+                    # plan (a --transforms plan can be real without --real)
+                    out["real"] = bool(plan.input_dtype == jnp.float32)
+                sched = (plan.batched_schedule(args.fields)
+                         if args.fields > 1 else plan.schedule)
+                tag = (f"{method}@{comm_dtype}@{fusion}"
+                       if args.fields > 1 else f"{method}@{comm_dtype}")
+                if ximpl != "jnp":
+                    tag += f"@{ximpl}"
+                out["methods"][tag] = {
+                    "comm_dtype": comm_dtype,
+                    "exchange_impl": ximpl,
+                    "batch_fusion": fusion if args.fields > 1 else None,
+                    "best_s": _time_plan(plan, shape, args),
+                    "schedule": [list(s) for s in sched],
+                    # itemsize=None prices each exchange at its traced
+                    # dtype width (complex64 after the r2c stage, f32 for
+                    # exchanges of still-real dct/dst data)
+                    "model_time_s": plan.model_time_s(
+                        itemsize=None, nfields=args.fields),
+                    "wire_bytes_per_dev": plan.comm_bytes_per_device(
+                        None, nfields=args.fields),
+                    # static certification of the timed artifact: the
+                    # row's numbers are meaningless if the compiled plan
+                    # doesn't match its claimed schedule
+                    "audit": None if args.no_audit
+                    else plan.audit(nfields=args.fields).summary(),
+                }
+                if args.fields > 1 and method == "auto":
+                    # one fusion pass suffices: auto tunes batch_fusion
+                    # per stage itself, so the plan's own mode is moot
+                    break
         if args.fields > 1:
             plan = build_plan(shape, args.grid, ndev, real=args.real,
                               method="fused", impl=args.impl,
@@ -349,7 +374,8 @@ def main(argv=None):
     plan = build_plan(shape, args.grid, ndev, real=args.real,
                       method=args.method, impl=args.impl, chunks=args.chunks,
                       comm_dtype=args.comm_dtype, tuner_cache=args.tune_cache,
-                      transforms=transforms, batch_fusion=args.batch_fusion)
+                      transforms=transforms, batch_fusion=args.batch_fusion,
+                      exchange_impl=args.exchange_impl)
     nf = args.fields
 
     if args.measure == "redistribution":
@@ -379,6 +405,7 @@ def main(argv=None):
     print(json.dumps({
         "shape": shape, "grid": args.grid, "method": args.method,
         "comm_dtype": plan.comm_dtype,
+        "exchange_impl": args.exchange_impl,
         "fields": nf,
         "batch_fusion": args.batch_fusion if nf > 1 else None,
         "real": bool(plan.input_dtype == jnp.float32),

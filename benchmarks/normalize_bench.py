@@ -56,6 +56,8 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
     if "methods" in raw:
         for tag, rec in raw["methods"].items():
             rows[tag] = {
+                "comm_dtype": rec.get("comm_dtype"),
+                "exchange_impl": rec.get("exchange_impl", "jnp"),
                 "best_s": rec["best_s"],
                 "model_time_s": rec.get("model_time_s"),
                 "wire_bytes_per_dev": rec.get("wire_bytes_per_dev"),

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core.fftcore import TransformSpec, dealias_grid
 from repro.core.meshutil import balanced_dims, make_mesh
 from repro.core.pfft import ParallelFFT
+from repro.core.planconfig import PlanConfig
 
 mesh = make_mesh(balanced_dims(len(jax.devices())), ("p0", "p1"))
 N = 32  # retained modes per axis
@@ -48,7 +49,7 @@ DT = 5e-3
 STEPS = int(os.environ.get("NS_STEPS", "8"))
 
 plan = ParallelFFT(
-    mesh, (M, M, M), grid=("p0", "p1"), method="fused",
+    mesh, (M, M, M), grid=("p0", "p1"), config=PlanConfig(method="fused"),
     transforms=(TransformSpec.pruned(N), TransformSpec.pruned(N),
                 TransformSpec.r2c(n_keep=N // 2 + 1)),
 )
@@ -164,7 +165,8 @@ from repro.robustness import FaultPlan  # noqa: E402
 
 with FaultPlan().nan_input(stage=0, engine="fused"):
     guarded = ParallelFFT(
-        mesh, (M, M, M), grid=("p0", "p1"), method="fused", guard="degrade",
+        mesh, (M, M, M), grid=("p0", "p1"),
+        config=PlanConfig(method="fused", guard="degrade"),
         transforms=(TransformSpec.pruned(N), TransformSpec.pruned(N),
                     TransformSpec.r2c(n_keep=N // 2 + 1)),
     )

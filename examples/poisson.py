@@ -22,11 +22,13 @@ import numpy as np
 
 from repro.core.meshutil import balanced_dims, make_mesh
 from repro.core.pfft import ParallelFFT
+from repro.core.planconfig import PlanConfig
 
 mesh = make_mesh(balanced_dims(len(jax.devices())), ("p0", "p1"))
 NX, NY, NZ = 32, 32, 32
 plan = ParallelFFT(mesh, (NX, NY, NZ), grid=("p0", "p1"),
-                   transforms=("dct2", "c2c", "r2c"), method="fused")
+                   transforms=("dct2", "c2c", "r2c"),
+                   config=PlanConfig(method="fused"))
 
 # Chebyshev-Gauss points along x (the DCT-II grid), uniform periodic y/z
 theta = (2 * np.arange(NX) + 1) * np.pi / (2 * NX)

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core.meshutil import balanced_dims, make_mesh
 from repro.core.pfft import ParallelFFT
+from repro.core.planconfig import PlanConfig
 
 # 2-D process grid (3x4 in the paper's Fig. 3; 2x4 here on 8 host devices —
 # adapts to however many devices the XLA_FLAGS above actually provide)
@@ -22,7 +23,7 @@ mesh = make_mesh(balanced_dims(len(jax.devices())), ("p0", "p1"))
 # global 3-D array, paper Appendix A uses {42, 127, 256} — deliberately
 # non-divisible extents to exercise the padding policy
 N = (42, 63, 64)
-plan = ParallelFFT(mesh, N, grid=("p0", "p1"), method="fused")
+plan = ParallelFFT(mesh, N, grid=("p0", "p1"), config=PlanConfig(method="fused"))
 
 rng = np.random.default_rng(0)
 u = (rng.standard_normal(N) + 1j * rng.standard_normal(N)).astype(np.complex64)

@@ -17,13 +17,14 @@ import jax.numpy as jnp
 
 from repro.core.meshutil import make_mesh
 from repro.core.pfft import ParallelFFT
+from repro.core.planconfig import PlanConfig
 
 mesh = make_mesh((2, 4), ("data", "model"))
 B, S, D, V = 8, 128, 64, 256
 
 # 2-D FFT mixing over (seq, feature) of a (B, S, D) activation block,
 # sequence sharded over "model": slab redistribution inside the layer.
-plan = ParallelFFT(mesh, (S, D), grid=("model",), method="fused")
+plan = ParallelFFT(mesh, (S, D), grid=("model",), config=PlanConfig(method="fused"))
 
 
 def mix(h):

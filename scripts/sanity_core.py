@@ -34,7 +34,8 @@ for method in ("fused", "traditional", "pipelined"):
 # --- ParallelFFT: pencil 2D grid c2c ---
 for real in (False, True):
     for gridspec in (("p0",), ("p0", "p1"), (("p0", "p1"),)):
-        plan = ParallelFFT(mesh, (16, 12, 20), gridspec, real=real)
+        transforms = ("c2c", "c2c", "r2c") if real else None
+        plan = ParallelFFT(mesh, (16, 12, 20), gridspec, transforms=transforms)
         xin = rng.standard_normal((16, 12, 20)).astype(np.float32)
         if not real:
             xin = (xin + 1j * rng.standard_normal((16, 12, 20))).astype(np.complex64)

@@ -33,6 +33,15 @@ PLAN008  guard-op presence matches the plan's ``guard`` mode: eqns
          checks) must appear in a guarded executor's jaxpr and must be
          **absent** — zero eqns — when ``guard="off"``, proving the
          unguarded artifact is bit-identical to a pre-guard plan.
+PLAN009  fused-kernel containment: ``pallas_call`` eqns attributed to
+         ``kernels/exchange/`` == the schedule's expected kernel launches
+         (2 per ``impl="pallas"`` lossy stage side-pair, × pipeline
+         slices, × nfields under non-stacked fusions; **zero** for jnp
+         stages), and when *every* lossy stage runs the fused kernels the
+         artifact carries **zero** eqns attributed to ``core/quant.py`` —
+         the whole codec (quantize, scales, plane marshalling) lives
+         inside the kernel calls, so no engine-side pack/unpack/codec
+         pass survives outside them.
 
 Realignment is asserted at the **jaxpr** level: on the CPU backend XLA
 decomposes the tiled all-to-all into slice/concat + a tuple-operand
@@ -73,6 +82,14 @@ ENGINE_MODULES = ("core/redistribute.py", "core/pfft.py")
 #: health checks live in repro/robustness/ precisely so this attribution
 #: can prove guard="off" artifacts contain none of them
 GUARD_MODULE_PREFIX = "robustness/"
+
+#: module prefix of the fused exchange kernels (PLAN009): pallas_call eqns
+#: attributed here are the kernel launches a pallas-impl stage must emit
+EXCHANGE_KERNEL_PREFIX = "kernels/exchange/"
+
+#: the reference wire codec (PLAN009): a plan whose lossy stages all run
+#: the fused kernels must trace zero eqns attributed to this module
+QUANT_MODULE = "core/quant.py"
 
 #: narrow wire dtypes whose converts must pair up (PLAN006)
 _NARROW_WIRE_DTYPES = ("int8", "bfloat16")
@@ -140,6 +157,7 @@ class AuditReport:
             "engine_transposes": self.observed.get("engine_transposes"),
             "engine_concats": self.observed.get("engine_concats"),
             "guard_eqns": self.observed.get("guard_eqns"),
+            "exchange_pallas_calls": self.observed.get("exchange_pallas_calls"),
         }
 
 
@@ -189,6 +207,8 @@ def _jaxpr_stats(jaxpr) -> dict:
     transposes/concatenates, narrow-dtype convert pairs, wide-dtype eqns."""
     a2a = 0
     guard_eqns = 0
+    kernel_pallas_calls = 0
+    quant_eqns = 0
     transposes: dict[str, int] = {}
     concats: dict[str, int] = {}
     conv_in: dict[str, int] = {d: 0 for d in _NARROW_WIRE_DTYPES}
@@ -199,7 +219,12 @@ def _jaxpr_stats(jaxpr) -> dict:
         mod = _eqn_module(eqn)
         if mod is not None and mod.startswith(GUARD_MODULE_PREFIX):
             guard_eqns += 1
-        if name == "all_to_all":
+        if mod == QUANT_MODULE:
+            quant_eqns += 1
+        if name == "pallas_call":
+            if mod is not None and mod.startswith(EXCHANGE_KERNEL_PREFIX):
+                kernel_pallas_calls += 1
+        elif name == "all_to_all":
             a2a += 1
         elif name in ("transpose", "concatenate"):
             mod = mod or "<jax>"
@@ -221,6 +246,8 @@ def _jaxpr_stats(jaxpr) -> dict:
     return {
         "jaxpr_all_to_alls": a2a,
         "guard_eqns": guard_eqns,
+        "exchange_pallas_calls": kernel_pallas_calls,
+        "quant_eqns": quant_eqns,
         "engine_transposes": eng_t,
         "engine_concats": eng_c,
         "transposes_by_module": transposes,
@@ -279,7 +306,11 @@ def _stage_payload_multiset(src_pen, v, w, isz, comm_dtype, nfields, fusion,
             # legally hoist across the (data-movement-only) collective; the
             # single-host CPU backend does exactly that, shipping the
             # rounded values at f32 width.  (int8 cannot be hoisted: its
-            # dequantize needs the separately-shipped scales.)
+            # dequantize needs the separately-shipped scales.)  This holds
+            # for impl="pallas" too on CPU: interpret mode lowers the
+            # kernel to transparent HLO, so the same rewrite applies —
+            # only a real (TPU) kernel launch is opaque to it, and there
+            # the cpu-only acceptance below never triggers.
             widened = narrow * 2 if comm_dtype == "bf16" else narrow
             out.append((narrow, widened))
             if comm_dtype == "int8":
@@ -294,6 +325,7 @@ def _expected_contract(plan, direction: str, schedule4, nfields: int) -> dict:
     from repro.core.pfft import ExchangeStage
     from repro.core.redistribute import (
         exchange_engine_ops, exchange_wire_bytes, pipeline_slices)
+    from repro.kernels.exchange import pallas_applicable
 
     stages, pencils, dtypes, sched = _plan_walk(plan, direction, schedule4)
     nbatch = 1 if nfields > 1 else 0
@@ -302,24 +334,32 @@ def _expected_contract(plan, direction: str, schedule4, nfields: int) -> dict:
     for i, st in enumerate(stages):
         if not isinstance(st, ExchangeStage):
             continue
-        method, chunks, comm_dtype, fusion = sched[ex_i]
+        method, chunks, comm_dtype, impl, fusion = sched[ex_i]
         ex_i += 1
         src_pen = pencils[i]
         isz = plan._stage_itemsize(i, dtypes)
         slices = (pipeline_slices(src_pen, st.v, st.w, chunks=chunks)
                   if method == "pipelined" else 1)
         per_field_launches = slices * (2 if comm_dtype == "int8" else 1)
+        # a pallas stage emits one encode + one decode kernel per
+        # payload collective side-pair (per slice for pipelined)
+        fused_kernel = impl == "pallas" and pallas_applicable(method, comm_dtype)
+        per_field_pcalls = 2 * slices if fused_kernel else 0
         if nbatch and fusion != "stacked":
             launches = per_field_launches * nfields
+            pcalls = per_field_pcalls * nfields
             ops = exchange_engine_ops(src_pen, st.v, st.w, method=method,
-                                      chunks=chunks, nbatch=0)
+                                      chunks=chunks, nbatch=0,
+                                      comm_dtype=comm_dtype, impl=impl)
             transposes = ops["transposes"] * nfields
             # per-field outputs are restacked with one concatenate
             concats = ops["concats"] * nfields + 1
         else:
             launches = per_field_launches
+            pcalls = per_field_pcalls
             ops = exchange_engine_ops(src_pen, st.v, st.w, method=method,
-                                      chunks=chunks, nbatch=nbatch)
+                                      chunks=chunks, nbatch=nbatch,
+                                      comm_dtype=comm_dtype, impl=impl)
             transposes, concats = ops["transposes"], ops["concats"]
         wire = exchange_wire_bytes(src_pen, st.v, st.w, itemsize=isz,
                                    comm_dtype=comm_dtype, nfields=nfields,
@@ -329,12 +369,14 @@ def _expected_contract(plan, direction: str, schedule4, nfields: int) -> dict:
             chunks, nbatch)
         per_stage.append({
             "stage": ex_i - 1, "v": st.v, "w": st.w, "method": method,
-            "chunks": chunks, "comm_dtype": comm_dtype, "batch_fusion": fusion,
+            "chunks": chunks, "comm_dtype": comm_dtype, "impl": impl,
+            "batch_fusion": fusion,
             "itemsize": isz, "slices": slices, "launches": launches,
             "wire_bytes": wire,
             "payload_bytes": sorted(p for p, _ in payloads),
             "payload_bytes_widened": sorted(wp for _, wp in payloads),
             "engine_transposes": transposes, "engine_concats": concats,
+            "pallas_calls": pcalls,
         })
     return {
         "launches": sum(s["launches"] for s in per_stage),
@@ -344,6 +386,7 @@ def _expected_contract(plan, direction: str, schedule4, nfields: int) -> dict:
             p for s in per_stage for p in s["payload_bytes_widened"]),
         "engine_transposes": sum(s["engine_transposes"] for s in per_stage),
         "engine_concats": sum(s["engine_concats"] for s in per_stage),
+        "pallas_calls": sum(s["pallas_calls"] for s in per_stage),
         "stages": per_stage,
     }
 
@@ -369,11 +412,11 @@ def audit_plan(plan, *, nfields: int = 1, direction: str = "forward",
     """
     import jax
 
-    from repro.core.pfft import _sched_entry
+    from repro.core.planconfig import as_schedule
+    from repro.core.quant import canonical_comm_dtype
 
     actual = plan.batched_schedule(nfields) if nfields > 1 else plan.schedule
-    claimed = tuple(_sched_entry(e) for e in (schedule if schedule is not None
-                                              else actual))
+    claimed = as_schedule(schedule if schedule is not None else actual)
     if len(claimed) != plan.n_exchanges:
         raise ValueError(f"claimed schedule has {len(claimed)} entries for "
                          f"{plan.n_exchanges} exchange stages")
@@ -431,11 +474,26 @@ def audit_plan(plan, *, nfields: int = 1, direction: str = "forward",
         violations.append(Violation(
             "PLAN005",
             f"silent wide-dtype eqns: {observed['wide_dtype_eqns'][:4]}"))
+    if observed["exchange_pallas_calls"] != expected["pallas_calls"]:
+        violations.append(Violation(
+            "PLAN009",
+            f"{EXCHANGE_KERNEL_PREFIX} pallas_call count "
+            f"{observed['exchange_pallas_calls']} != the schedule's expected "
+            f"{expected['pallas_calls']} fused-kernel launches"))
+    lossy_entries = [e for e in claimed
+                     if canonical_comm_dtype(e.comm_dtype) != "complex64"]
+    if (lossy_entries and all(e.impl == "pallas" for e in lossy_entries)
+            and observed["quant_eqns"]):
+        violations.append(Violation(
+            "PLAN009",
+            f"every lossy stage claims impl='pallas' but {observed['quant_eqns']} "
+            f"eqn(s) still attribute to {QUANT_MODULE} — codec work leaked "
+            f"outside the fused kernels"))
     claimed_narrow = {"bfloat16": 0, "int8": 0}
-    for _, _, cd, _ in claimed:
-        if cd == "bf16":
+    for e in claimed:
+        if e.comm_dtype == "bf16":
             claimed_narrow["bfloat16"] += 1
-        elif cd == "int8":
+        elif e.comm_dtype == "int8":
             claimed_narrow["int8"] += 1
     for d in _NARROW_WIRE_DTYPES:
         enc, dec = observed["narrow_converts_in"][d], observed["narrow_converts_out"][d]
@@ -509,36 +567,51 @@ def audit_plan(plan, *, nfields: int = 1, direction: str = "forward",
 
 def _example_plans():
     """Mirrors of the three example plans (examples/*.py shapes, transforms
-    and methods), built on however many devices the backend provides."""
+    and methods) plus the fused-kernel (PLAN009) cases, built on however
+    many devices the backend provides."""
     import jax
 
     from repro.core.fftcore import TransformSpec, dealias_grid
     from repro.core.meshutil import balanced_dims, make_mesh
     from repro.core.pfft import ParallelFFT
+    from repro.core.planconfig import PlanConfig
 
     mesh = make_mesh(balanced_dims(len(jax.devices())), ("p0", "p1"))
     n = 32
     m = dealias_grid(n)
     return {
         "quickstart": (ParallelFFT(mesh, (42, 63, 64), grid=("p0", "p1"),
-                                   method="fused"), 1),
+                                   config=PlanConfig(method="fused")), 1),
         # same plan with runtime guards on: PLAN008's positive case (guard
         # eqns present) and proof the guarded artifact still meets every
         # other schedule contract
-        "quickstart[guarded]": (ParallelFFT(mesh, (42, 63, 64),
-                                            grid=("p0", "p1"), method="fused",
-                                            guard="degrade"), 1),
+        "quickstart[guarded]": (ParallelFFT(
+            mesh, (42, 63, 64), grid=("p0", "p1"),
+            config=PlanConfig(method="fused", guard="degrade")), 1),
+        # the fused exchange kernels on both lossy payloads: PLAN009's
+        # positive cases — every codec/pack eqn must live inside the
+        # kernels/exchange/ pallas calls, none in core/quant.py
+        "quickstart[int8-pallas]": (ParallelFFT(
+            mesh, (42, 63, 64), grid=("p0", "p1"),
+            config=PlanConfig(method="fused", comm_dtype="int8",
+                              exchange_impl="pallas")), 1),
+        "quickstart[bf16-pallas-trad]": (ParallelFFT(
+            mesh, (42, 63, 64), grid=("p0", "p1"),
+            config=PlanConfig(method="traditional", comm_dtype="bf16",
+                              exchange_impl="pallas")), 1),
         "navier_stokes": (ParallelFFT(
-            mesh, (m, m, m), grid=("p0", "p1"), method="fused",
+            mesh, (m, m, m), grid=("p0", "p1"),
+            config=PlanConfig(method="fused"),
             transforms=(TransformSpec.pruned(n), TransformSpec.pruned(n),
                         TransformSpec.r2c(n_keep=n // 2 + 1))), 1),
         "navier_stokes[batched]": (ParallelFFT(
-            mesh, (m, m, m), grid=("p0", "p1"), method="fused",
+            mesh, (m, m, m), grid=("p0", "p1"),
+            config=PlanConfig(method="fused"),
             transforms=(TransformSpec.pruned(n), TransformSpec.pruned(n),
                         TransformSpec.r2c(n_keep=n // 2 + 1))), 3),
         "poisson": (ParallelFFT(mesh, (32, 32, 32), grid=("p0", "p1"),
                                 transforms=("dct2", "c2c", "r2c"),
-                                method="fused"), 1),
+                                config=PlanConfig(method="fused")), 1),
     }
 
 

@@ -53,14 +53,16 @@ per-stage behavior is the plan's ``batch_fusion`` mode:
 ``"per-field"``                — N serialized exchange+FFT pairs inside
     one jit (the baseline the other modes are judged against).
 
-``method="auto"`` prices all three: the tuned schedule gains a fourth,
-batch-aware dimension — ``(method, chunks, comm_dtype, batch_fusion)``
-per stage, cached per batch size (see :mod:`repro.core.tuner`).
+``method="auto"`` prices all three: the tuned schedule is a
+:class:`~repro.core.planconfig.StageEntry` — ``(method, chunks,
+comm_dtype, impl, batch_fusion)`` — per stage, cached per batch size
+(see :mod:`repro.core.tuner`).
 """
 
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 from functools import cached_property, partial
 
@@ -73,26 +75,32 @@ from repro.core.fftcore import TransformSpec, as_spec
 from repro.core.meshutil import shard_map
 from repro.core.decomp import pad_to_multiple
 from repro.core.pencil import Group, Pencil, group_names, group_size, make_pencil, pad_global, unpad_global
+from repro.core.planconfig import PlanConfig, StageEntry, as_schedule
 from repro.core.quant import canonical_comm_dtype
-from repro.core.redistribute import BATCH_FUSIONS, exchange_shard, exchange_shard_sliced
+from repro.core.redistribute import exchange_shard, exchange_shard_sliced
 from repro.robustness import faults as _faults, health as _health
 
-#: (method, chunks, comm_dtype) per ExchangeStage, in forward stage order
-Schedule = tuple[tuple[str, int, str], ...]
+#: StageEntry per ExchangeStage, in forward stage order (legacy raw
+#: 3/4-tuples are upgraded on entry via StageEntry.make — see planconfig)
+Schedule = tuple[StageEntry, ...]
 
-#: (method, chunks, comm_dtype, batch_fusion) per ExchangeStage — the
-#: batch-aware schedule of a multi-field execution (see batched_schedule)
-BatchedSchedule = tuple[tuple[str, int, str, str], ...]
+#: alias kept for the batch-aware schedule of a multi-field execution
+#: (see batched_schedule); since StageEntry carries batch_fusion, the two
+#: schedule types are now the same shape
+BatchedSchedule = tuple[StageEntry, ...]
+
+_UNSET = object()
+
+# once-per-process deprecation flags (module state, not per-plan)
+_legacy_kwargs_warned = False
+_real_kwarg_warned = False
 
 
-def _sched_entry(entry) -> tuple[str, int, str, str]:
-    """Normalize a schedule entry to (method, chunks, comm_dtype,
-    batch_fusion): plain 3-field entries execute every field stacked."""
-    if len(entry) == 3:
-        method, chunks, comm_dtype = entry
-        return method, chunks, comm_dtype, "stacked"
-    method, chunks, comm_dtype, fusion = entry
-    return method, chunks, comm_dtype, fusion
+def _warn_once(flag_name: str, msg: str):
+    g = globals()
+    if not g[flag_name]:
+        g[flag_name] = True
+        warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 # ---------------------------------------------------------------------------
 # Plan construction
@@ -125,42 +133,34 @@ class ParallelFFT:
               extents; pruned axes emit fewer spectral modes than this.
       grid:   k mesh axis names (or tuples of names) decomposing array axes
               0..k-1, k ≤ d-1.  (C row-major convention, like the paper.)
-      real:   sugar for ``transforms`` = all-c2c with r2c on the last axis.
+      config: a :class:`~repro.core.planconfig.PlanConfig` carrying every
+              execution knob — method, FFT impl, exchange_impl, chunks,
+              comm_dtype, batch_fusion, tuner_cache, guard (see its
+              docstring for field semantics).  This is the supported
+              surface; ``config=None`` means ``PlanConfig()`` defaults.
       transforms: per-axis :class:`TransformSpec` (or tag strings "c2c",
               "r2c", "dct2", "dct3", "dst2", "dst3"), length d.  Transforms
               are applied in descending axis order; an r2c axis must come
               before any complex-producing axis in that order (i.e. every
               axis to its right is dct/dst), and at most one r2c is
               allowed.  Mutually exclusive with ``real=True``.
-      method: "fused" (paper) | "traditional" (baseline) |
-              "pipelined" (sliced exchange overlapped with next-stage FFTs) |
-              "auto" (per-stage micro-benchmarked schedule, cached on disk).
-      impl:   local FFT implementation ("jnp" | "matmul").
-      chunks: slice count for method="pipelined" (ignored otherwise).
-      comm_dtype: exchange wire payload policy (see
-              :mod:`repro.core.redistribute`): None/"complex64" = lossless
-              (default, bit-identical to the uncompressed plan), "bf16" =
-              2x fewer wire bytes, "int8" = 4x.  For the explicit methods
-              every exchange uses it as given; for method="auto" it is an
-              *accuracy budget* — the tuner sweeps every payload no lossier
-              than this and picks the fastest per stage.
-      batch_fusion: multi-field execution mode for the explicit methods
-              (ignored for single-field calls): "stacked" (default; one
-              all-to-all for all fields per exchange),
-              "pipelined-across-fields" (per-field collectives interleaved
-              with the previous field's FFTs), or "per-field" (serialized
-              baseline).  For method="auto" it is tuned per stage instead.
-      tuner_cache: path for method="auto"'s schedule cache (default:
-              $REPRO_TUNER_CACHE or ~/.cache/repro/fft_tuner.json).
-      guard:  runtime-guard mode (see :mod:`repro.robustness`): "off"
-              (default — compiles bit-identically to an unguarded plan),
-              "strict" (fused health checks; any trip raises
-              :class:`repro.robustness.GuardError`), or "degrade" (on a
-              trip or execution failure, widen the wire payload one rung /
-              fall back through the engines / quarantine-and-retune a bad
-              cache entry, then re-execute — bounded retries, every
-              transition logged).  Guarded ``forward``/``backward`` (and
-              the ``_many`` variants) return ``(result, HealthReport)``.
+
+    Deprecated (still functional, each warns once per process):
+
+      real:   sugar for ``transforms`` = all-c2c with r2c on the last
+              axis; pass the explicit ``transforms=`` spec instead.
+      method / impl / exchange_impl / chunks / comm_dtype / batch_fusion /
+      tuner_cache / guard: the pre-PlanConfig kwarg sprawl.  Passing any
+              of them forwards into ``PlanConfig.from_legacy_kwargs`` (so
+              behavior is identical to the config= path); combining them
+              with ``config=`` is an error.
+
+    The resolved config is ``plan.config``; its fields stay mirrored as
+    ``plan.method`` / ``plan.impl`` / ``plan.exchange_impl`` /
+    ``plan.chunks`` / ``plan.comm_dtype`` / ``plan.batch_fusion`` /
+    ``plan.tuner_cache`` / ``plan.guard`` for downstream consumers.
+    Guarded plans' ``forward``/``backward`` (and the ``_many`` variants)
+    return ``(result, HealthReport)``.
     """
 
     def __init__(
@@ -169,25 +169,45 @@ class ParallelFFT:
         shape: tuple[int, ...],
         grid: tuple[Group, ...],
         *,
-        real: bool = False,
+        config: PlanConfig | None = None,
         transforms=None,
-        method: str = "fused",
-        impl: str = "jnp",
-        chunks: int = 4,
-        comm_dtype: str | None = None,
-        batch_fusion: str = "stacked",
-        tuner_cache: str | None = None,
-        guard: str = "off",
+        real: bool = False,
+        method: str | None = None,
+        impl: str | None = None,
+        exchange_impl: str | None = None,
+        chunks: int | None = None,
+        comm_dtype=_UNSET,
+        batch_fusion: str | None = None,
+        tuner_cache=_UNSET,
+        guard: str | None = None,
     ):
         d, k = len(shape), len(grid)
         if not 1 <= k <= d - 1:
             raise ValueError(f"need 1 <= len(grid)={k} <= d-1={d - 1}")
-        if method not in ("fused", "traditional", "pipelined", "auto"):
-            raise ValueError(f"unknown method {method!r}")
-        if batch_fusion not in BATCH_FUSIONS:
-            raise ValueError(f"unknown batch_fusion {batch_fusion!r}; expected one of {BATCH_FUSIONS}")
-        if guard not in _health.GUARD_MODES:
-            raise ValueError(f"unknown guard {guard!r}; expected one of {_health.GUARD_MODES}")
+        legacy = {k_: v for k_, v in dict(
+            method=method, impl=impl, exchange_impl=exchange_impl,
+            chunks=chunks, batch_fusion=batch_fusion, guard=guard).items()
+            if v is not None}
+        if comm_dtype is not _UNSET:
+            legacy["comm_dtype"] = comm_dtype
+        if tuner_cache is not _UNSET:
+            legacy["tuner_cache"] = tuner_cache
+        if legacy:
+            if config is not None:
+                raise ValueError(
+                    f"pass either config= or the legacy kwargs {sorted(legacy)}, not both")
+            _warn_once(
+                "_legacy_kwargs_warned",
+                f"ParallelFFT execution kwargs ({sorted(legacy)}) are deprecated; "
+                "pass config=PlanConfig(...) instead")
+            config = PlanConfig.from_legacy_kwargs(**legacy)
+        elif config is None:
+            config = PlanConfig()
+        if real:
+            _warn_once(
+                "_real_kwarg_warned",
+                "ParallelFFT(real=True) is deprecated; pass transforms= "
+                "('c2c', ..., 'r2c') instead")
         if transforms is not None:
             if real:
                 raise ValueError("pass either real=True or transforms=, not both")
@@ -212,11 +232,15 @@ class ParallelFFT:
                 seen_complex = True
         self.transforms = specs
         self.mesh, self.shape, self.grid = mesh, tuple(shape), tuple(grid)
-        self.method, self.impl = method, impl
-        self.chunks, self.tuner_cache = chunks, tuner_cache
-        self.comm_dtype = canonical_comm_dtype(comm_dtype)
-        self.batch_fusion = batch_fusion
-        self.guard = guard
+        # config is the source of truth; the mirrors keep every downstream
+        # consumer (tuner, planlint, benchmarks, tests) on its old surface
+        self.config = config
+        self.method, self.impl = config.method, config.impl
+        self.exchange_impl = config.exchange_impl
+        self.chunks, self.tuner_cache = config.chunks, config.tuner_cache
+        self.comm_dtype = config.comm_dtype
+        self.batch_fusion = config.batch_fusion
+        self.guard = config.guard
         self.d, self.k = d, k
         self._batched_sched_memo: dict[int, BatchedSchedule] = {}
         self._batched_exec: dict = {}
@@ -290,34 +314,33 @@ class ParallelFFT:
 
     @cached_property
     def schedule(self) -> Schedule:
-        """(method, chunks, comm_dtype) per exchange stage, forward order.
-        Uniform for the explicit methods; tuned (and disk-cached) for
+        """:class:`StageEntry` per exchange stage, forward order.  Uniform
+        for the explicit methods; tuned (and disk-cached) for
         method="auto", where ``comm_dtype`` is the per-stage payload the
-        tuner picked within the plan's accuracy budget."""
+        tuner picked within the plan's accuracy budget and ``impl`` is
+        swept only within the plan's ``exchange_impl`` candidate budget."""
         if self.method == "auto":
             from repro.core import tuner
 
-            return tuner.get_or_tune(self, cache_path=self.tuner_cache)
-        c = self.chunks if self.method == "pipelined" else 1
-        return ((self.method, c, self.comm_dtype),) * self.n_exchanges
+            return as_schedule(tuner.get_or_tune(self, cache_path=self.tuner_cache))
+        entry = self.config.stage_entry()._replace(batch_fusion="stacked")
+        return (entry,) * self.n_exchanges
 
     def batched_schedule(self, nfields: int) -> BatchedSchedule:
-        """(method, chunks, comm_dtype, batch_fusion) per exchange stage for
-        an ``nfields``-field execution, forward order.  Explicit methods use
-        the plan's uniform ``batch_fusion``; method="auto" tunes the full
-        4-dimensional candidate space per stage, cached per batch size."""
+        """:class:`StageEntry` per exchange stage for an ``nfields``-field
+        execution, forward order.  Explicit methods use the plan's uniform
+        ``batch_fusion``; method="auto" tunes the full batch-aware
+        candidate space per stage, cached per batch size."""
         if nfields <= 1:
-            return tuple((m, c, d, "stacked") for m, c, d in self.schedule)
+            return tuple(e._replace(batch_fusion="stacked") for e in self.schedule)
         if nfields not in self._batched_sched_memo:
             if self.method == "auto":
                 from repro.core import tuner
 
-                sched = tuner.get_or_tune(self, cache_path=self.tuner_cache,
-                                          nfields=nfields)
+                sched = as_schedule(tuner.get_or_tune(
+                    self, cache_path=self.tuner_cache, nfields=nfields))
             else:
-                c = self.chunks if self.method == "pipelined" else 1
-                sched = ((self.method, c, self.comm_dtype, self.batch_fusion),
-                         ) * self.n_exchanges
+                sched = (self.config.stage_entry(),) * self.n_exchanges
             self._batched_sched_memo[nfields] = sched
         return self._batched_sched_memo[nfields]
 
@@ -391,7 +414,7 @@ class ParallelFFT:
         if schedule is None:
             schedule = (self.batched_schedule(nfields) if nfields > 1
                         else self.schedule)
-        schedule = tuple(_sched_entry(e) for e in schedule)
+        schedule = as_schedule(schedule)
         key = (direction, schedule, nfields)
         if key not in self._guarded_exec:
             nbatch = 1 if nfields > 1 else 0
@@ -560,13 +583,13 @@ class ParallelFFT:
             if batched is not None:
                 # a resolved batched schedule carries the per-stage tuned
                 # payloads of *this* batch size
-                entries = [_sched_entry(e)[:3] for e in batched]
+                entries = [tuple(e)[:3] for e in as_schedule(batched)]
             elif self.method == "auto" and "schedule" not in self.__dict__:
                 # stay pure arithmetic: a byte count must never trigger the
                 # tuner; price the uniform budget until a schedule exists
                 entries = [("fused", 1, self.comm_dtype)] * self.n_exchanges
             else:
-                entries = [(m, c, d) for m, c, d in self.schedule]
+                entries = [tuple(e)[:3] for e in self.schedule]
         else:
             entries = [("fused", 1, canonical_comm_dtype(comm_dtype))] * self.n_exchanges
         total, ex_i = 0, 0
@@ -629,7 +652,8 @@ class ParallelFFT:
         while i < len(stages):
             st = stages[i]
             if isinstance(st, ExchangeStage):
-                method, chunks, comm_dtype, fusion = _sched_entry(schedule[ex_i])
+                entry = StageEntry.make(schedule[ex_i])
+                method, chunks, comm_dtype, ex_impl, fusion = entry
                 if batch_fusion is not None:
                     fusion = batch_fusion
                 ex_i += 1
@@ -642,8 +666,8 @@ class ParallelFFT:
                     i += 1  # folded into the exchange term
                 total += exchange_time_model(
                     src_pen, st.v, st.w, itemsize=isz, method=method,
-                    chunks=chunks, comm_dtype=comm_dtype, ici_bw=ici_bw,
-                    hbm_bw=hbm_bw, overlap_compute_s=fft_s,
+                    chunks=chunks, comm_dtype=comm_dtype, impl=ex_impl,
+                    ici_bw=ici_bw, hbm_bw=hbm_bw, overlap_compute_s=fft_s,
                     nfields=nfields, batch_fusion=fusion)
             else:
                 total += nfields * self._stage_flops_at(i, stages, pencils, dtypes) / ndev / peak_flops
@@ -696,8 +720,8 @@ def _reverse_plan(stages, pencils):
 def _run_stages(block, *, stages, pencils, schedule, impl, sign, nbatch=0,
                 guard=False):
     """Execute the plan on one shard (inside shard_map).  ``schedule`` gives
-    (method, chunks, comm_dtype[, batch_fusion]) per exchange stage, in this
-    plan's stage order; each exchange is emitted together with the FFT of
+    a :class:`StageEntry` (or any legacy tuple form) per exchange stage, in
+    this plan's stage order; each exchange is emitted together with the FFT of
     its newly-aligned axis (always the next stage in forward and backward
     plans) so the engine can interleave collective and compute — per slice
     for method="pipelined", per field for batch_fusion="pipelined-across-
@@ -714,14 +738,13 @@ def _run_stages(block, *, stages, pencils, schedule, impl, sign, nbatch=0,
     shard's partial and the host sums them."""
     cur = pencils[0]
     per_stage = []
-    lossy = guard and _health.schedule_is_lossy(
-        [_sched_entry(e) for e in schedule])
+    lossy = guard and _health.schedule_is_lossy(as_schedule(schedule))
     energy_in = _health.block_energy(block) if lossy else jnp.float32(0.0)
     ex_i = i = 0
     while i < len(stages):
         st = stages[i]
         if isinstance(st, ExchangeStage):
-            entry = _sched_entry(schedule[ex_i])
+            entry = StageEntry.make(schedule[ex_i])
             nxt_st = stages[i + 1] if i + 1 < len(stages) else None
             fft_st = nxt_st if isinstance(nxt_st, FFTStage) and nxt_st.axis == st.w else None
             block, used_fft, stats = _run_exchange_stage(
@@ -751,8 +774,7 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
                         mid: Pencil, after: Pencil | None, entry, *,
                         impl, sign, nbatch, guard=False, stage_index=None):
     """One exchange stage (+ the FFT of its newly-aligned axis, when
-    ``fft_st`` is given), under one ``(method, chunks, comm_dtype,
-    batch_fusion)`` schedule entry.  Returns ``(block, used_fft, stats)``
+    ``fft_st`` is given), under one :class:`StageEntry` schedule entry.  Returns ``(block, used_fft, stats)``
     where ``stats`` is the stage's guard-counter dict (None unless
     ``guard``).  The fault-injection taps are free no-ops without an armed
     :class:`repro.robustness.FaultPlan`.
@@ -768,7 +790,7 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
     ``"per-field"``               — strictly serialized per-field
         exchange+FFT pairs (the baseline loop, inside one jit).
     """
-    method, chunks, comm_dtype, fusion = entry
+    method, chunks, comm_dtype, ex_impl, fusion = entry
     with _faults.stage_context(stage_index, method, comm_dtype):
         _faults.check_compile(method, comm_dtype)
         block = _faults.tap_stage_input(block)
@@ -782,7 +804,7 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
                 nonlocal stats
                 r = exchange_shard(fb, ex.v, ex.w, ex.group, method=method,
                                    chunks=chunks, comm_dtype=comm_dtype,
-                                   guard=guard)
+                                   impl=ex_impl, guard=guard)
                 if guard:
                     r, s = r
                     stats = _health.add_stats(stats, s)
@@ -799,8 +821,8 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
                     if fft_st is not None and method == "pipelined" and chunks > 1:
                         r = _exchange_then_fft(
                             fb, ex, fft_st, mid, after, chunks=chunks,
-                            comm_dtype=comm_dtype, impl=impl, sign=sign,
-                            guard=guard)
+                            comm_dtype=comm_dtype, exchange_impl=ex_impl,
+                            impl=impl, sign=sign, guard=guard)
                         if guard:
                             r, s = r
                             stats = _health.add_stats(stats, s)
@@ -819,13 +841,13 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
         if fft_st is not None and method == "pipelined" and chunks > 1:
             res = _exchange_then_fft(block, ex, fft_st, mid, after,
                                      chunks=chunks, comm_dtype=comm_dtype,
-                                     impl=impl, sign=sign, nbatch=nbatch,
-                                     guard=guard)
+                                     exchange_impl=ex_impl, impl=impl,
+                                     sign=sign, nbatch=nbatch, guard=guard)
             block, stats = res if guard else (res, None)
             return block, True, stats
         res = exchange_shard(block, ex.v, ex.w, ex.group, method=method,
                              chunks=chunks, comm_dtype=comm_dtype,
-                             nbatch=nbatch, guard=guard)
+                             impl=ex_impl, nbatch=nbatch, guard=guard)
         block, stats = res if guard else (res, None)
         if fft_st is not None:
             block = _fft_padded_axis(block, fft_st, mid, after, impl=impl,
@@ -835,7 +857,8 @@ def _run_exchange_stage(block, ex: ExchangeStage, fft_st: FFTStage | None,
 
 def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
                        mid: Pencil, after: Pencil, *, chunks, impl, sign,
-                       comm_dtype=None, nbatch=0, guard=False):
+                       comm_dtype=None, exchange_impl="jnp", nbatch=0,
+                       guard=False):
     """Pipelined exchange fused with the next stage's 1-D FFT: issue the
     per-slice all-to-alls interleaved with the per-slice transforms.  Each
     slice is a disjoint v-subrange of the fused output, so slicing commutes
@@ -845,8 +868,8 @@ def _exchange_then_fft(block, ex: ExchangeStage, fft_st: FFTStage,
     XLA may run slice i+1's collective DMA under slice i's FFT compute.
     With ``nbatch=1`` each slice carries every field's sub-range."""
     res = exchange_shard_sliced(block, ex.v, ex.w, ex.group, chunks=chunks,
-                                comm_dtype=comm_dtype, nbatch=nbatch,
-                                guard=guard)
+                                comm_dtype=comm_dtype, impl=exchange_impl,
+                                nbatch=nbatch, guard=guard)
     pieces, stats = res if guard else (res, None)
     out = [_fft_padded_axis(p, fft_st, mid, after, impl=impl, sign=sign, nbatch=nbatch)
            for p in pieces]

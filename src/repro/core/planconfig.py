@@ -1,0 +1,189 @@
+"""Plan configuration — the single validated surface for ``ParallelFFT``.
+
+Two types live here:
+
+:class:`PlanConfig` — a frozen dataclass consolidating the execution
+    knobs that used to sprawl across ``ParallelFFT.__init__``'s keyword
+    list (``method`` / ``impl`` / ``exchange_impl`` / ``chunks`` /
+    ``comm_dtype`` / ``batch_fusion`` / ``tuner_cache`` / ``guard``).
+    All validation happens in one place (``__post_init__``), so every
+    consumer — the plan itself, the tuner, the benchmarks — sees an
+    already-canonical config.  ``ParallelFFT(mesh, shape, grid,
+    config=PlanConfig(...))`` is the supported surface; the legacy
+    kwargs still work through a deprecation shim that forwards into a
+    PlanConfig and warns once per process.
+
+:class:`StageEntry` — one exchange stage's tuned/selected execution
+    entry: ``(method, chunks, comm_dtype, impl, batch_fusion)``.  This
+    replaces the historical raw ``(method, chunks, comm_dtype[,
+    batch_fusion])`` 3-vs-4 tuples; being a NamedTuple it still unpacks
+    and indexes like one (``entry[2]`` is the comm_dtype everywhere it
+    always was), and :meth:`StageEntry.make` upgrades any legacy tuple —
+    the ``impl`` and ``batch_fusion`` vocabularies are disjoint, so a
+    4-tuple's last field is classified unambiguously.
+
+The new ``impl`` stage field selects the *exchange-local* implementation:
+
+``"jnp"``    — the reference path: :mod:`repro.core.quant` codecs plus the
+    engine's jnp pack/unpack copies (multiple HBM round-trips).
+``"pallas"`` — the fused exchange kernels of
+    :mod:`repro.kernels.exchange`: quantize/narrow + chunk-layout
+    pack fused into one HBM-read → VMEM → HBM-write pass on the encode
+    side, and dequantize + unpack-transpose fused on the decode side, so
+    the only HBM traffic between 1-D FFTs is the collective itself (the
+    paper's no-realignment thesis, now holding for lossy wire payloads
+    too).  Interpret mode makes the same kernels run on CPU.
+
+Note this is distinct from the plan-level ``impl`` (the local *FFT*
+implementation, ``"jnp"`` | ``"matmul"``); the exchange impl is
+``PlanConfig.exchange_impl`` and per-stage ``StageEntry.impl``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields, replace
+from typing import NamedTuple
+
+from repro.core.quant import canonical_comm_dtype
+
+#: exchange-local implementations a stage entry may carry
+EXCHANGE_IMPLS = ("jnp", "pallas")
+
+#: batch_fusion execution modes for a stacked multi-field exchange stage
+#: (mirrored by repro.core.redistribute.BATCH_FUSIONS, which re-exports it)
+BATCH_FUSIONS = ("stacked", "pipelined-across-fields", "per-field")
+
+#: exchange engines a stage entry may carry ("auto" is plan-level only)
+METHODS = ("fused", "traditional", "pipelined")
+
+
+class StageEntry(NamedTuple):
+    """One exchange stage's execution entry.
+
+    Unpacks/indexes like the raw tuples it replaced: ``entry[0]`` method,
+    ``entry[1]`` chunks, ``entry[2]`` comm_dtype; the new ``impl`` field
+    sits at index 3 and ``batch_fusion`` at 4.
+    """
+
+    method: str
+    chunks: int
+    comm_dtype: str
+    impl: str = "jnp"
+    batch_fusion: str = "stacked"
+
+    @classmethod
+    def make(cls, entry) -> "StageEntry":
+        """Normalize any schedule-entry form — a StageEntry, a legacy
+        ``(method, chunks, comm_dtype)`` or ``(..., batch_fusion)`` tuple,
+        or a full 5-tuple — into a validated StageEntry.  A legacy
+        4-tuple's last field is classified by vocabulary (``impl`` and
+        ``batch_fusion`` values are disjoint)."""
+        if isinstance(entry, cls):
+            return entry.validate()
+        t = tuple(entry)
+        if len(t) == 3:
+            return cls(t[0], int(t[1]), t[2]).validate()
+        if len(t) == 4:
+            if t[3] in BATCH_FUSIONS:
+                return cls(t[0], int(t[1]), t[2], "jnp", t[3]).validate()
+            return cls(t[0], int(t[1]), t[2], t[3]).validate()
+        if len(t) == 5:
+            return cls(t[0], int(t[1]), t[2], t[3], t[4]).validate()
+        raise ValueError(f"schedule entry {entry!r} has {len(t)} fields; expected 3-5")
+
+    def validate(self) -> "StageEntry":
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}; expected one of {METHODS}")
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.impl not in EXCHANGE_IMPLS:
+            raise ValueError(f"unknown exchange impl {self.impl!r}; expected one of {EXCHANGE_IMPLS}")
+        if self.batch_fusion not in BATCH_FUSIONS:
+            raise ValueError(
+                f"unknown batch_fusion {self.batch_fusion!r}; expected one of {BATCH_FUSIONS}")
+        d = canonical_comm_dtype(self.comm_dtype)
+        return self if d == self.comm_dtype else self._replace(comm_dtype=d)
+
+
+def as_schedule(entries) -> tuple[StageEntry, ...]:
+    """Normalize an iterable of schedule entries (any legacy form) into a
+    tuple of :class:`StageEntry` — the one normalizer every consumer of a
+    user/disk-provided schedule shares."""
+    return tuple(StageEntry.make(e) for e in entries)
+
+
+@dataclass(frozen=True)
+class PlanConfig:
+    """Validated execution config for one :class:`~repro.core.pfft.ParallelFFT`.
+
+    Fields (see the ParallelFFT docstring for full semantics):
+
+    method:        "fused" (paper) | "traditional" | "pipelined" | "auto".
+    impl:          local 1-D FFT implementation ("jnp" | "matmul").
+    exchange_impl: exchange-local pack/codec implementation ("jnp" |
+                   "pallas").  Explicit methods run every stage with it;
+                   for ``method="auto"`` it is a *candidate budget* — the
+                   tuner sweeps pallas kernels (where applicable) only
+                   when this is "pallas", and picks them per stage only
+                   where they win.
+    chunks:        slice count for method="pipelined".
+    comm_dtype:    wire payload policy / accuracy budget (canonicalized).
+    batch_fusion:  multi-field execution mode for the explicit methods.
+    tuner_cache:   schedule-cache path for method="auto".
+    guard:         runtime-guard mode ("off" | "strict" | "degrade").
+    """
+
+    method: str = "fused"
+    impl: str = "jnp"
+    exchange_impl: str = "jnp"
+    chunks: int = 4
+    comm_dtype: str | None = None
+    batch_fusion: str = "stacked"
+    tuner_cache: str | None = None
+    guard: str = "off"
+
+    def __post_init__(self):
+        if self.method not in (*METHODS, "auto"):
+            raise ValueError(f"unknown method {self.method!r}; expected one of {(*METHODS, 'auto')}")
+        if self.impl not in ("jnp", "matmul"):
+            raise ValueError(f"unknown FFT impl {self.impl!r}; expected 'jnp' or 'matmul'")
+        if self.exchange_impl not in EXCHANGE_IMPLS:
+            raise ValueError(
+                f"unknown exchange_impl {self.exchange_impl!r}; expected one of {EXCHANGE_IMPLS}")
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.batch_fusion not in BATCH_FUSIONS:
+            raise ValueError(
+                f"unknown batch_fusion {self.batch_fusion!r}; expected one of {BATCH_FUSIONS}")
+        # lazy import-cycle-free guard-mode check (health has no core deps)
+        from repro.robustness.health import GUARD_MODES
+
+        if self.guard not in GUARD_MODES:
+            raise ValueError(f"unknown guard {self.guard!r}; expected one of {GUARD_MODES}")
+        object.__setattr__(self, "comm_dtype", canonical_comm_dtype(self.comm_dtype))
+
+    def replace(self, **changes) -> "PlanConfig":
+        """Functional update (re-validates through ``__post_init__``)."""
+        return replace(self, **changes)
+
+    def stage_entry(self) -> StageEntry:
+        """The uniform StageEntry an explicit-method config implies for
+        every exchange stage (``method="auto"`` resolves per stage via the
+        tuner instead)."""
+        chunks = self.chunks if self.method == "pipelined" else 1
+        return StageEntry(self.method, chunks, self.comm_dtype,
+                          self.exchange_impl, self.batch_fusion)
+
+    def to_dict(self) -> dict:
+        return {f.name: getattr(self, f.name) for f in fields(self)}
+
+    @classmethod
+    def from_legacy_kwargs(cls, **kwargs) -> "PlanConfig":
+        """Build a config from the legacy ParallelFFT keyword set, keeping
+        each unset field at its default (the deprecation shim's helper)."""
+        return cls(**{k: v for k, v in kwargs.items() if v is not None})
+
+
+# make `field` referenced for linters that dislike unused imports via
+# dataclasses API surface changes
+_ = field

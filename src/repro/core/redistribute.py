@@ -94,11 +94,14 @@ from repro.core import quant
 from repro.core.decomp import local_lengths
 from repro.core.meshutil import axis_size as _mesh_axis_size, shard_map
 from repro.core.pencil import Group, Pencil, group_names, group_size
+from repro.core.planconfig import BATCH_FUSIONS, EXCHANGE_IMPLS  # noqa: F401 — re-exported
 from repro.core.quant import canonical_comm_dtype, wire_ratio
+from repro.kernels.exchange import ops as _xk
 from repro.robustness import faults as _faults, health as _health
 
 Method = str  # "fused" | "traditional" | "pipelined"
 CommDtype = str  # "complex64" | "bf16" | "int8" (None accepted as complex64)
+Impl = str  # "jnp" | "pallas" (exchange-local implementation, see planconfig)
 
 #: chunk counts the tuner sweeps for the pipelined method
 PIPELINE_CHUNK_CANDIDATES = (2, 4, 8)
@@ -113,6 +116,7 @@ def _all_to_all_comm(
     comm_dtype: CommDtype | None = None,
     batch_axes: tuple[int, ...] = (),
     guard: bool = False,
+    impl: Impl = "jnp",
 ) -> jax.Array:
     """``lax.all_to_all(..., tiled=True)`` with an optional reduced-precision
     wire payload (the comm-compression core all three engines share).
@@ -140,6 +144,15 @@ def _all_to_all_comm(
     output-energy guard (detection is global there, not per-stage).  The
     fault taps (:mod:`repro.robustness.faults`) trace zero ops unless a
     FaultPlan is armed, so an unguarded exchange compiles bit-identically.
+
+    ``impl="pallas"`` runs the lossy codec through the fused exchange
+    kernels (:mod:`repro.kernels.exchange`): encode and decode each become
+    one pallas call instead of the multi-pass jnp chain, and — because the
+    narrowing convert lives *inside* an opaque kernel — XLA cannot hoist
+    it across the collective, so the wire genuinely carries the narrow
+    payload (the single-host CPU backend widens the jnp bf16 wire back to
+    f32; see planlint PLAN002).  A lossless payload has no codec to fuse
+    and always takes the jnp path below (``pallas_applicable``).
     """
     d = canonical_comm_dtype(comm_dtype)
     if d == "complex64":
@@ -149,6 +162,28 @@ def _all_to_all_comm(
         out = _faults.tap_wire(out, "payload")
         return (out, stats) if guard else out
     iscomplex = jnp.iscomplexobj(y)
+    if impl == "pallas":
+        if batch_axes != tuple(range(len(batch_axes))):
+            raise ValueError("impl='pallas' requires leading batch axes; "
+                             f"got {batch_axes}")
+        m = _axis_size(axis_name)
+        sd = _faults.scale_div() if d == "int8" else None
+        q, scale, stats = _xk.encode_payload(
+            y, axis=split_axis, m=m, nbatch=len(batch_axes), codec=d,
+            guard=guard, scale_div=sd)
+        # payload is (P, *y.shape) re/im planes: split/concat shift past P
+        qx = lax.all_to_all(q, axis_name, split_axis=split_axis + 1,
+                            concat_axis=concat_axis + 1, tiled=True)
+        qx = _faults.tap_wire(qx, "payload")
+        sx = None
+        if scale is not None:  # int8: (F, M) per-(field, chunk) scales
+            sx = lax.all_to_all(scale, axis_name, split_axis=1,
+                                concat_axis=1, tiled=True)
+            sx = _faults.tap_wire(sx, "scale")
+        out = _xk.decode_payload(qx, axis=concat_axis, m=m,
+                                 nbatch=len(batch_axes), scale=sx, codec=d,
+                                 iscomplex=iscomplex)
+        return (out, stats) if guard else out
     planes = quant.complex_to_planes(y) if iscomplex else y[None].astype(jnp.float32)
     sa, ca = split_axis + 1, concat_axis + 1
     ba = tuple(b + 1 for b in batch_axes)  # planes coords
@@ -207,6 +242,7 @@ def exchange_shard(
     comm_dtype: CommDtype | None = None,
     nbatch: int = 0,
     guard: bool = False,
+    impl: Impl = "jnp",
 ) -> jax.Array:
     """Per-shard v→w exchange over mesh subgroup ``group``.
 
@@ -227,6 +263,14 @@ def exchange_shard(
 
     ``guard=True`` returns ``(out, stats)`` with this exchange's fused
     health counters (see :func:`_all_to_all_comm`).
+
+    ``impl="pallas"`` fuses each side's local work (codec, and for
+    ``traditional`` the pack/unpack realignment too) into one exchange
+    kernel per side — see :mod:`repro.kernels.exchange`.  It applies to
+    lossy payloads only (a lossless exchange has no local codec pass to
+    fuse) and to ``transposed_out=False``; inapplicable combinations
+    execute the jnp reference path, so ``impl`` never changes results
+    beyond the documented codec parity bounds.
     """
     if v == w:
         raise ValueError("exchange requires v != w (paper Alg. 3)")
@@ -240,12 +284,12 @@ def exchange_shard(
         # axes are the "subarray datatype" description.
         return _all_to_all_comm(block, axis_name, split_axis=bv, concat_axis=bw,
                                 comm_dtype=comm_dtype, batch_axes=batch_axes,
-                                guard=guard)
+                                guard=guard, impl=impl)
 
     if method == "pipelined":
         r = exchange_shard_sliced(block, v, w, group, chunks=chunks,
                                   comm_dtype=comm_dtype, nbatch=nbatch,
-                                  guard=guard)
+                                  guard=guard, impl=impl)
         pieces, stats = r if guard else (r, None)
         out = pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, axis=bv)
         return (out, stats) if guard else out
@@ -255,6 +299,26 @@ def exchange_shard(
         nv = block.shape[bv]
         if nv % m != 0:
             raise ValueError(f"axis v={v} extent {nv} not divisible by group size {m}")
+        d = canonical_comm_dtype(comm_dtype)
+        if impl == "pallas" and not transposed_out and _xk.pallas_applicable(method, d):
+            # One kernel packs chunk-major AND encodes (Eqs. 15-16 cost no
+            # extra pass); the inverse kernel scatters + dequantizes (Eq. 17).
+            sd = _faults.scale_div() if d == "int8" else None
+            payload, scale, stats = _xk.pack_chunks(
+                block, axis=bv, m=m, nbatch=nbatch, codec=d, guard=guard,
+                scale_div=sd)
+            y = lax.all_to_all(payload, axis_name, split_axis=0,
+                               concat_axis=0, tiled=True)
+            y = _faults.tap_wire(y, "payload")
+            sx = None
+            if scale is not None:  # int8: (M, F) scales, chunk-major like the payload
+                sx = lax.all_to_all(scale, axis_name, split_axis=0,
+                                    concat_axis=0, tiled=True)
+                sx = _faults.tap_wire(sx, "scale")
+            out = _xk.unpack_chunks(y, v=v, w=w, m=m, nbatch=nbatch,
+                                    scale=sx, codec=d,
+                                    iscomplex=jnp.iscomplexobj(block))
+            return (out, stats) if guard else out
         # Eq. (15): reshape v -> (m, nv/m); stride change only, free.
         shape = list(block.shape)
         shape[bv : bv + 1] = [m, nv // m]
@@ -292,6 +356,7 @@ def exchange_shard_sliced(
     comm_dtype: CommDtype | None = None,
     nbatch: int = 0,
     guard: bool = False,
+    impl: Impl = "jnp",
 ) -> list[jax.Array]:
     """The fused v→w exchange as ``chunks`` independent per-slice
     all-to-alls (the ``pipelined`` engine).
@@ -337,7 +402,8 @@ def exchange_shard_sliced(
         off += n
         r = _all_to_all_comm(piece, axis_name, split_axis=bv, concat_axis=w_eff,
                              comm_dtype=comm_dtype,
-                             batch_axes=tuple(range(nbatch)), guard=guard)
+                             batch_axes=tuple(range(nbatch)), guard=guard,
+                             impl=impl)
         if guard:
             p, s = r
             stats = _health.add_stats(stats, s)
@@ -363,6 +429,7 @@ def exchange(
     method: Method = "fused",
     chunks: int = 1,
     comm_dtype: CommDtype | None = None,
+    impl: Impl = "jnp",
 ) -> tuple[jax.Array, Pencil]:
     """Jit-level v→w exchange of a globally-sharded array.
 
@@ -380,7 +447,7 @@ def exchange(
     dst = src.exchanged(v, w)
     fn = shard_map(
         partial(exchange_shard, v=v, w=w, group=group, method=method,
-                chunks=chunks, comm_dtype=comm_dtype),
+                chunks=chunks, comm_dtype=comm_dtype, impl=impl),
         mesh=src.mesh,
         in_specs=src.spec,
         out_specs=dst.spec,
@@ -440,6 +507,7 @@ def pipeline_slices(src: Pencil, v: int, w: int, *, chunks: int) -> int:
 def exchange_engine_ops(
     src: Pencil, v: int, w: int, *, method: Method = "fused", chunks: int = 1,
     transposed_out: bool = False, nbatch: int = 0,
+    comm_dtype: CommDtype | None = None, impl: Impl = "jnp",
 ) -> dict[str, int]:
     """Materialized realignment ops (``transpose`` / ``concatenate`` jaxpr
     eqns) each engine's shard function emits *outside* the collective — the
@@ -453,8 +521,17 @@ def exchange_engine_ops(
     0`` packs for free; ``w+nbatch == 0`` or ``transposed_out`` skips the
     unpack), where jnp.moveaxis is the identity and no transpose eqn
     exists.  ``pipelined`` emits one concatenate reassembling its slices
-    whenever it actually slices (>1 pieces)."""
+    whenever it actually slices (>1 pieces).
+
+    ``impl="pallas"`` (where applicable: lossy payload, and for
+    traditional no ``transposed_out``) folds traditional's pack/unpack
+    into the exchange kernels' index maps — zero engine-attributed
+    transposes, the no-realignment invariant planlint's PLAN009 verifies.
+    Pipelined's slice-reassembly concatenate remains either way."""
     if method == "traditional":
+        if (impl == "pallas" and not transposed_out
+                and canonical_comm_dtype(comm_dtype) != "complex64"):
+            return {"transposes": 0, "concats": 0}
         bv, bw = v + nbatch, w + nbatch
         t = int(bv != 0) + int(bw != 0 and not transposed_out)
         return {"transposes": t, "concats": 0}
@@ -466,12 +543,20 @@ def exchange_engine_ops(
     raise ValueError(f"unknown method {method!r}")
 
 
-def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "fused") -> int:  # noqa: ARG001 — (src, v, w) parity with the exchange_* family
+def exchange_local_copy_elems(
+    src: Pencil, v: int, w: int, *, method: Method = "fused",
+    comm_dtype: CommDtype | None = None, impl: Impl = "jnp",
+) -> int:  # noqa: ARG001 — (src, v, w) parity with the exchange_* family
     """Elements of *materialized local copies* the method pays on top of the
-    wire payload: traditional's pack+unpack transposes touch the local block
-    twice; pipelined's final concat materializes it once; fused pays none
-    (the layout change rides inside the collective)."""
+    wire payload and codec: traditional's pack+unpack transposes touch the
+    local block twice; pipelined's final concat materializes it once; fused
+    pays none (the layout change rides inside the collective).  Under
+    ``impl="pallas"`` with a lossy payload, traditional's pack/unpack ride
+    the codec kernels' index maps — the engine pays no copies of its own
+    (pipelined's reassembly concat remains)."""
     local = int(np.prod(src.local_shape, dtype=np.int64))
+    if impl == "pallas" and canonical_comm_dtype(comm_dtype) != "complex64":
+        return {"fused": 0, "pipelined": local, "traditional": 0}.get(method, 0)
     return {"fused": 0, "pipelined": local, "traditional": 2 * local}.get(method, 0)
 
 
@@ -479,9 +564,6 @@ def exchange_local_copy_elems(src: Pencil, v: int, w: int, *, method: Method = "
 #: that makes per-field exchanges of many small fields latency-bound and a
 #: stacked batched exchange win
 ICI_LATENCY_S = 1e-6
-
-#: batch_fusion execution modes for a stacked multi-field exchange stage
-BATCH_FUSIONS = ("stacked", "pipelined-across-fields", "per-field")
 
 
 def exchange_time_model(
@@ -499,6 +581,7 @@ def exchange_time_model(
     nfields: int = 1,
     batch_fusion: str = "stacked",
     ici_latency_s: float = ICI_LATENCY_S,
+    impl: Impl = "jnp",
 ) -> float:
     """Overlap-aware modeled seconds for one exchange (+ the 1-D FFT stage
     that follows it, whose *per-field* time the caller passes as
@@ -526,11 +609,19 @@ def exchange_time_model(
     """
     d = canonical_comm_dtype(comm_dtype)
     comm_s = exchange_wire_bytes(src, v, w, itemsize=itemsize, comm_dtype=d) / ici_bw
-    copy_s = exchange_local_copy_elems(src, v, w, method=method) * itemsize / hbm_bw
+    copy_s = (exchange_local_copy_elems(src, v, w, method=method, comm_dtype=d,
+                                        impl=impl) * itemsize / hbm_bw)
     if d != "complex64":
-        # encode: read wide + write narrow; decode: read narrow + write wide
+        # pallas: the codec is one lean pass per side (read wide + write
+        # narrow / read narrow + write wide) — the scale reduction and any
+        # pack realignment ride the same pass.  jnp: each side additionally
+        # materializes the full-width re/im plane stack (the quantize pass
+        # cannot fuse with the producer across its own amax reduction).
         local = int(np.prod(src.local_shape, dtype=np.int64))
-        copy_s += 2 * local * (itemsize + itemsize // wire_ratio(d)) / hbm_bw
+        per_side = itemsize + itemsize // wire_ratio(d)
+        if impl != "pallas":
+            per_side += itemsize
+        copy_s += 2 * local * per_side / hbm_bw
 
     def one(comm, fft):
         """One exchange of ``comm`` seconds of wire plus ``fft`` seconds of

@@ -22,31 +22,47 @@ exchange stage is the cross product of
   small grids favor stacked; compute-heavy stages favor
   pipelined-across-fields.
 
+* exchange-local impl (``StageEntry.impl``): the jnp reference pack/codec
+  vs the fused Pallas exchange kernels of :mod:`repro.kernels.exchange`.
+  Pallas candidates are swept only when the plan's ``exchange_impl``
+  budget is ``"pallas"`` *and* the payload is lossy (a lossless exchange
+  has no local pass for the kernels to fuse away — see
+  ``pallas_applicable``), so ``method="auto"`` picks the kernels per
+  stage only where they actually win.
+
 This module micro-benchmarks each candidate on the stage's real shapes (the
 exchange plus the 1-D FFT it feeds, so overlap is priced in) and caches the
 winning schedule on disk.
 
-Cache schema v5: each entry maps a :func:`plan_key` — mesh shape, global
+Cache schema v6: each entry maps a :func:`plan_key` — mesh shape, global
 shape, grid, the per-axis transform tags (so a dealiased/pruned or DCT plan
 never collides with the plain c2c plan of the same shape), impl, backend
 *and device kind* (so timings from different TPU generations under the same
 ``backend`` string never collide), **the batch size** (``nfields`` — a
 3-field schedule must never be replayed for a 16-field execution), the
-candidate set, and ``schema: 5`` — to ``{"schedule": [[method, chunks,
-comm_dtype(, batch_fusion)], ...], "timings": {...}}`` (4-field entries for
-``nfields > 1``).  v5 adds per-entry health marks: :func:`quarantine` sets
-``entry["bad"] = {"reason": ...}`` (and bumps ``entry["quarantines"]``)
-when a guarded execution catches the entry's schedule failing at runtime;
-a marked entry is never replayed — :func:`_parse_entry` rejects it, forcing
-a retune whose fresh timings (under whatever fault made the old winner
-lose) replace the mark.  v1–v4 entries (no transforms/nfields field / older
-schema tags) have incompatible keys and are simply never matched; stale
-entries are harmless and a corrupt or non-dict cache file is silently
-treated as empty and rewritten — a stale cache must never raise.  Writes
-are atomic (temp file + ``os.replace``) and **merge** by default: the
-writer re-reads the file and overlays only its own keys, so concurrent
-workers tuning *different* plans no longer clobber each other's entries
-(last-writer-wins now applies per key, not per file).
+candidate set, and ``schema: 6`` — to ``{"schedule": [[method, chunks,
+comm_dtype, impl, batch_fusion], ...], "timings": {...}}`` (full
+:class:`~repro.core.planconfig.StageEntry` rows).  Entry health marks
+(since v5): :func:`quarantine` sets ``entry["bad"] = {"reason": ...}``
+(and bumps ``entry["quarantines"]``) when a guarded execution catches the
+entry's schedule failing at runtime; a marked entry is never replayed —
+:func:`_parse_entry` rejects it, forcing a retune whose fresh timings
+(under whatever fault made the old winner lose) replace the mark.
+
+v5 entries (3/4-field schedule rows, ``schema: 5`` keys) are **migrated,
+not retuned**: a v6 default-candidate miss whose exchange-impl budget is
+"jnp" reconstructs the plan's exact v5 key, upgrades a healthy legacy
+entry through :func:`~repro.core.planconfig.StageEntry.make` (every old
+row gains ``impl="jnp"``), and re-saves it under the v6 key — the v5
+timings stay valid because the jnp-only candidate space is unchanged.  A
+"pallas" budget never migrates: its candidate set contains kernels the v5
+sweep never measured.  v1–v4 entries have incompatible keys and are simply
+never matched; stale entries are harmless and a corrupt or non-dict cache
+file is silently treated as empty and rewritten — a stale cache must never
+raise.  Writes are atomic (temp file + ``os.replace``) and **merge** by
+default: the writer re-reads the file and overlays only its own keys, so
+concurrent workers tuning *different* plans no longer clobber each other's
+entries (last-writer-wins now applies per key, not per file).
 
 Cache location: ``$REPRO_TUNER_CACHE`` or ``~/.cache/repro/fft_tuner.json``;
 an in-process memo avoids re-reading the file per plan.
@@ -64,11 +80,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.meshutil import shard_map
+from repro.core.planconfig import BATCH_FUSIONS, StageEntry, as_schedule
 from repro.core.quant import canonical_comm_dtype
-from repro.core.redistribute import BATCH_FUSIONS, PIPELINE_CHUNK_CANDIDATES
+from repro.core.redistribute import PIPELINE_CHUNK_CANDIDATES
+from repro.kernels.exchange import pallas_applicable
 
 #: cache schema version (bump when the key or entry layout changes)
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 #: how many times a guarded execution may quarantine-and-retune one cache
 #: entry before the runner gives up and raises (see repro.robustness.runner)
@@ -89,24 +107,33 @@ COMM_DTYPE_LADDER = {
 }
 
 
-def candidates_for(comm_dtype=None) -> tuple[tuple[str, int, str], ...]:
-    """Full (method, chunks, comm_dtype) candidate set for an accuracy
-    budget: every engine × every payload no lossier than ``comm_dtype``."""
+def candidates_for(comm_dtype=None, exchange_impl: str = "jnp",
+                   ) -> tuple[StageEntry, ...]:
+    """Full :class:`StageEntry` candidate set for an accuracy budget: every
+    engine × every payload no lossier than ``comm_dtype``; an
+    ``exchange_impl="pallas"`` budget additionally sweeps the fused Pallas
+    kernels for every candidate they apply to (lossy payloads)."""
     ladder = COMM_DTYPE_LADDER[canonical_comm_dtype(comm_dtype)]
-    return tuple((m, c, d) for d in ladder for m, c in ENGINE_CANDIDATES)
+    out = [StageEntry(m, c, d) for d in ladder for m, c in ENGINE_CANDIDATES]
+    if exchange_impl == "pallas":
+        out += [StageEntry(m, c, d, "pallas") for d in ladder
+                for m, c in ENGINE_CANDIDATES if pallas_applicable(m, d)]
+    return tuple(out)
 
 
-def batched_candidates_for(comm_dtype=None) -> tuple[tuple[str, int, str, str], ...]:
-    """4-field (method, chunks, comm_dtype, batch_fusion) candidate set for
-    a multi-field execution: every single-field candidate × every batch
-    fusion mode."""
-    return tuple((m, c, d, f) for f in BATCH_FUSIONS
-                 for m, c, d in candidates_for(comm_dtype))
+def batched_candidates_for(comm_dtype=None, exchange_impl: str = "jnp",
+                           ) -> tuple[StageEntry, ...]:
+    """Batch-aware candidate set for a multi-field execution: every
+    single-field candidate × every batch fusion mode."""
+    return tuple(e._replace(batch_fusion=f) for f in BATCH_FUSIONS
+                 for e in candidates_for(comm_dtype, exchange_impl))
 
 
 def _default_candidates(plan, nfields: int):
     budget = getattr(plan, "comm_dtype", None)
-    return candidates_for(budget) if nfields <= 1 else batched_candidates_for(budget)
+    impl_budget = getattr(plan, "exchange_impl", "jnp")
+    return (candidates_for(budget, impl_budget) if nfields <= 1
+            else batched_candidates_for(budget, impl_budget))
 
 
 def _tag(cand) -> str:
@@ -116,7 +143,7 @@ def _tag(cand) -> str:
 #: default candidate set (lossless budget)
 DEFAULT_CANDIDATES = candidates_for("complex64")
 
-_MEMO: dict[str, tuple[tuple[str, int, str], ...]] = {}
+_MEMO: dict[str, tuple[StageEntry, ...]] = {}
 
 #: per-candidate stage timings memo shared across accuracy budgets in one
 #: process: a --compare sweep tuning the same plan under complex64, bf16
@@ -202,27 +229,32 @@ def save_cache(path: Path, data: dict, *, merge: bool = True) -> bool:
 
 def get_or_tune(plan, *, cache_path: str | None = None,
                 candidates=None, nfields: int = 1):
-    """Return the tuned schedule for ``plan`` — (method, chunks, comm_dtype)
-    per exchange stage, plus a batch_fusion field when ``nfields > 1`` —
-    consulting the in-process memo, then the disk cache, then benchmarking.
-    The default candidate set is every engine × every payload within the
-    plan's ``comm_dtype`` accuracy budget (× every batch fusion mode for a
-    batched plan).  A stale-schema or otherwise malformed cache entry is
-    ignored and overwritten, never raised on."""
-    if candidates is None:
+    """Return the tuned schedule for ``plan`` — a :class:`StageEntry` per
+    exchange stage — consulting the in-process memo, then the disk cache
+    (including a v5-entry migration, see module docstring), then
+    benchmarking.  The default candidate set is every engine × every
+    payload within the plan's ``comm_dtype`` accuracy budget × every
+    exchange impl within its ``exchange_impl`` budget (× every batch
+    fusion mode for a batched plan).  A stale-schema or otherwise
+    malformed cache entry is ignored and overwritten, never raised on."""
+    defaults = candidates is None
+    if defaults:
         candidates = _default_candidates(plan, nfields)
+    candidates = as_schedule(candidates)
     path = Path(cache_path) if cache_path else default_cache_path()
     key = plan_key(plan, candidates, nfields=nfields)
     memo_key = f"{path}|{key}"
     if memo_key in _MEMO:
         return _MEMO[memo_key]
     disk = load_cache(path)
-    # entry arity follows the candidate arity (an explicit 3-field candidate
-    # list tunes/stores 3-field entries even for a batched plan — the
-    # executor defaults their batch_fusion to "stacked")
-    want_len = len(candidates[0]) if candidates else (3 if nfields <= 1 else 4)
-    sched = _parse_entry(disk.get(key), plan.n_exchanges, want_len,
-                         candidates=candidates)
+    sched = _parse_entry(disk.get(key), plan.n_exchanges, candidates=candidates)
+    if sched is None and defaults:
+        migrated = _migrate_v5_entry(plan, disk, nfields)
+        if migrated is not None:
+            sched, legacy = migrated
+            save_cache(path, {key: {"schedule": [list(s) for s in sched],
+                                    "timings": legacy.get("timings", {}),
+                                    "migrated_from_schema": 5}})
     if sched is None:
         sched, timings = tune_plan(plan, candidates=candidates, nfields=nfields)
         entry = {"schedule": [list(s) for s in sched], "timings": timings}
@@ -234,6 +266,38 @@ def get_or_tune(plan, *, cache_path: str | None = None,
         save_cache(path, {key: entry})  # delta write: merge keeps other plans
     _MEMO[memo_key] = sched
     return sched
+
+
+def _legacy_v5_candidates(plan, nfields: int):
+    """The exact (jnp-only) v5 candidate tuples for a plan's budget — the
+    raw 3/4-field rows v5 swept, for key reconstruction and entry
+    validation during migration."""
+    ladder = COMM_DTYPE_LADDER[canonical_comm_dtype(getattr(plan, "comm_dtype", None))]
+    flat = tuple((m, c, d) for d in ladder for m, c in ENGINE_CANDIDATES)
+    if nfields <= 1:
+        return flat
+    return tuple((m, c, d, f) for f in BATCH_FUSIONS for m, c, d in flat)
+
+
+def _migrate_v5_entry(plan, disk: dict, nfields: int):
+    """Look up this plan's schema-5 cache entry and upgrade it to a v6
+    schedule (``(schedule, legacy_entry)``), or ``None`` when there is
+    nothing migratable: no/unhealthy legacy entry, a legacy schedule
+    outside the legacy candidate set, or an ``exchange_impl="pallas"``
+    budget (whose v6 candidate set sweeps kernels v5 never measured — a
+    migrated winner could be stale, so that case retunes)."""
+    if getattr(plan, "exchange_impl", "jnp") != "jnp":
+        return None
+    legacy_cands = _legacy_v5_candidates(plan, nfields)
+    fields = _key_fields(plan, nfields)
+    fields["schema"] = 5
+    fields["candidates"] = sorted(_tag(c) for c in legacy_cands)
+    legacy_key = json.dumps(fields, sort_keys=True, default=str)
+    entry = disk.get(legacy_key)
+    sched = _parse_entry(entry, plan.n_exchanges, candidates=legacy_cands)
+    if sched is None:
+        return None
+    return sched, entry
 
 
 def quarantine(path, key: str, reason: str) -> int:
@@ -256,16 +320,17 @@ def quarantine(path, key: str, reason: str) -> int:
     return entry["quarantines"]
 
 
-def _parse_entry(entry, n_exchanges: int, want_len: int, candidates=None):
-    """Validate one disk-cache entry into a schedule tuple, or ``None`` if
-    missing/malformed — wrong arity, wrong stage count, junk types, or
-    unknown engine/payload/fusion *values* (a hand-edited or bit-rotted
-    entry must retune, never raise later inside the executor).
+def _parse_entry(entry, n_exchanges: int, candidates=None):
+    """Validate one disk-cache entry into a :class:`StageEntry` schedule,
+    or ``None`` if missing/malformed — wrong stage count, junk types, or
+    unknown engine/payload/impl/fusion *values* (a hand-edited or
+    bit-rotted entry must retune, never raise later inside the executor).
+    Legacy 3/4-field rows upgrade through :func:`StageEntry.make`.
 
     When ``candidates`` is given, every stage entry must additionally be a
     member of that *live* candidate set: an entry naming an engine, chunk
-    count, payload or fusion that has since been dropped from the sweep
-    (e.g. a hand-edited chunks=16 after ``PIPELINE_CHUNK_CANDIDATES``
+    count, payload, impl or fusion that has since been dropped from the
+    sweep (e.g. a hand-edited chunks=16 after ``PIPELINE_CHUNK_CANDIDATES``
     shrank) is a retune, not a schedule the executor should replay.
 
     A quarantined entry (``entry["bad"]`` set, see :func:`quarantine`)
@@ -273,18 +338,11 @@ def _parse_entry(entry, n_exchanges: int, want_len: int, candidates=None):
     if not isinstance(entry, dict) or entry.get("bad"):
         return None
     try:
-        raw = entry["schedule"]
-        sched = tuple((str(e[0]), int(e[1]), *(str(x) for x in e[2:])) for e in raw)
-        if len(sched) != n_exchanges or any(len(e) != want_len for e in sched):
+        sched = as_schedule(entry["schedule"])
+        if len(sched) != n_exchanges:
             return None
-        for e in sched:
-            if e[0] not in ("fused", "traditional", "pipelined") or e[1] < 1:
-                return None
-            canonical_comm_dtype(e[2])  # ValueError on junk -> caught below
-            if want_len == 4 and e[3] not in BATCH_FUSIONS:
-                return None
         if candidates is not None:
-            live = {tuple(c) for c in candidates}
+            live = set(as_schedule(candidates))
             if any(e not in live for e in sched):
                 return None
         return sched
@@ -295,16 +353,16 @@ def _parse_entry(entry, n_exchanges: int, want_len: int, candidates=None):
 
 def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2,
               nfields: int = 1):
-    """Micro-benchmark every candidate — (engine, chunks, comm_dtype), plus
-    a batch_fusion field for ``nfields > 1`` — for every exchange stage of
-    ``plan`` (each stage timed together with the 1-D FFT it feeds, so
-    pipelined candidates get credit for overlap; batched candidates run on
-    the real stacked ``(nfields, …)`` stage shapes) and return
-    (schedule, timings) with ``timings[stage][tag] = seconds``."""
+    """Micro-benchmark every :class:`StageEntry` candidate for every
+    exchange stage of ``plan`` (each stage timed together with the 1-D FFT
+    it feeds, so pipelined candidates get credit for overlap; batched
+    candidates run on the real stacked ``(nfields, …)`` stage shapes) and
+    return (schedule, timings) with ``timings[stage][tag] = seconds``."""
     from repro.core.pfft import ExchangeStage
 
     if candidates is None:
         candidates = _default_candidates(plan, nfields)
+    candidates = as_schedule(candidates)
     base_key = json.dumps(_key_fields(plan, nfields), sort_keys=True, default=str)
     schedule = []
     timings: dict[str, dict[str, float]] = {}
@@ -328,18 +386,17 @@ def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2,
                 per[tag] = float("inf")
                 per[f"{tag}:error"] = repr(e)[:200]
         best = min((k for k in per if ":" not in k), key=lambda k: per[k])
-        cand = by_tag[best]
-        schedule.append((cand[0], int(cand[1]), *cand[2:]))
+        schedule.append(by_tag[best])
         timings[f"stage{si}"] = per  # errors kept: an inf needs its reason
     return tuple(schedule), timings
 
 
 def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str,
-                batch_fusion: str = "stacked", *, repeats: int, inner: int,
-                nfields: int = 1) -> float:
+                impl: str = "jnp", batch_fusion: str = "stacked", *,
+                repeats: int, inner: int, nfields: int = 1) -> float:
     """Wall-time one exchange stage (+ its following FFT) under one engine,
-    payload, and — for a stacked ``nfields > 1`` input — batch fusion mode,
-    via the same stage executor the plan runs
+    payload, exchange impl, and — for a stacked ``nfields > 1`` input —
+    batch fusion mode, via the same stage executor the plan runs
     (:func:`repro.core.pfft._run_exchange_stage`)."""
     from repro.core import fftcore
     from repro.core.pfft import FFTStage, _run_exchange_stage
@@ -350,7 +407,7 @@ def _time_stage(plan, si: int, method: str, chunks: int, comm_dtype: str,
     has_fft = isinstance(follow, FFTStage) and follow.axis == st.w
     out_pen = plan.pencil_trace[si + 2] if has_fft else plan.pencil_trace[si + 1]
     nbatch = 1 if nfields > 1 else 0
-    entry = (method, chunks, comm_dtype, batch_fusion)
+    entry = StageEntry(method, chunks, comm_dtype, impl, batch_fusion)
 
     def run(block):
         out, _, _ = _run_exchange_stage(

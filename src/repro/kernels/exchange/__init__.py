@@ -1,0 +1,13 @@
+"""Fused exchange-local kernels (Pallas): realignment-free pack/codec.
+
+See :mod:`repro.kernels.exchange.ops` for the engine-facing API and
+:mod:`repro.kernels.exchange.kernel` for the pallas_call builders.
+"""
+
+from repro.kernels.exchange.ops import (  # noqa: F401
+    decode_payload,
+    encode_payload,
+    pack_chunks,
+    pallas_applicable,
+    unpack_chunks,
+)

@@ -1,0 +1,202 @@
+"""Pallas TPU kernels: fused exchange-local codec + chunk-layout passes.
+
+The paper's thesis (Sec. 3) is that redistribution should never need a
+separate local-realignment pass.  The jnp reference engines honor that for
+the *lossless* exchange (the strided split/concat rides inside the one
+``all_to_all``), but a lossy ``comm_dtype`` reintroduces local passes:
+quantize → (pack) → collective → (unpack) → dequantize each materialize
+the block in HBM.  These kernels collapse each side into a single
+HBM-read → VMEM-tile → HBM-write pass:
+
+encode side (``encode_pallas_call``) — one kernel computes the per-block
+    int8 scale (or bf16 rounding) *and* writes the payload directly in the
+    outgoing wire layout.  With ``pack=True`` the write is the traditional
+    engine's chunk-major gather (paper Eq. 16) — the pack transpose costs
+    no extra pass, it is just the kernel's output index map.
+
+decode side (``decode_pallas_call`` / ``unpack_decode_pallas_call``) —
+    the inverse: dequantize fused with the received-chunk scatter; for the
+    traditional engine the unpack transpose (Eq. 17's realignment) is again
+    only the output index map.
+
+Canonical view: every operand is reshaped (stride-only, free) to
+
+    (P, F, A, M, B, R)
+
+``P`` re/im planes (1 for real data), ``F`` collapsed leading batch/field
+axes, ``A``/``R`` collapsed axes before/after the exchange axis, ``M`` the
+subgroup size, ``B`` the per-chunk extent.  The grid is ``(F, M)``: one
+program instance per (field, destination-chunk) — exactly the scale
+blocking of :func:`repro.core.quant.quantize_int8`, so the int8 math here
+is *bitwise identical* to the reference codec (same max-abs block, same
+``_EPS`` floor, same round/clip).  The plane axis always stays inside the
+block so re/im share one scale, as in the reference.
+
+The kernels run on TPU natively and everywhere else via ``interpret=True``
+(pure-jax emulation), same doctrine as :mod:`repro.kernels.transpose`.  No
+complex dtype ever enters VMEM: callers pass (re, im) planes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant import _EPS
+
+_WIRE_DTYPES = {"int8": jnp.int8, "bf16": jnp.bfloat16}
+
+
+def _one_hot_map(ndim: int, f_slot: int, m_slot: int):
+    """Index map placing grid coords (f, m) at the given slots, 0 elsewhere."""
+
+    def index_map(i, j):
+        idx = [0] * ndim
+        idx[f_slot] = i
+        idx[m_slot] = j
+        return tuple(idx)
+
+    return index_map
+
+
+def _blocked(shape: tuple[int, ...], f_slot: int, m_slot: int) -> tuple[int, ...]:
+    """Block shape: full extents except 1 at the two grid-mapped slots."""
+    blk = list(shape)
+    blk[f_slot] = 1
+    blk[m_slot] = 1
+    return tuple(blk)
+
+
+def _encode_block(x, codec: str, scale_div):
+    """The reference codec math of :mod:`repro.core.quant`, applied to one
+    VMEM block (= one (field, chunk) scale block).  Returns
+    ``(payload, scale | None, nonfinite, saturated)``."""
+    if codec == "bf16":
+        nonfinite = jnp.sum(~jnp.isfinite(x), dtype=jnp.float32)
+        return x.astype(jnp.bfloat16), None, nonfinite, jnp.float32(0.0)
+    finite = jnp.isfinite(x)
+    xf = jnp.where(finite, x, 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), _EPS) / 127.0
+    if scale_div is not None:
+        scale = scale / scale_div
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    nonfinite = jnp.sum(~finite, dtype=jnp.float32)
+    saturated = jnp.sum((q == 127) | (q == -127), dtype=jnp.float32)
+    return q, scale.astype(jnp.float32), nonfinite, saturated
+
+
+def encode_pallas_call(view_shape, *, codec: str, pack: bool, guard: bool,
+                       scale_div, interpret: bool):
+    """Build the fused encode kernel for a ``(P, F, A, M, B, R)`` view.
+
+    Outputs (in order): the narrow payload — same view layout, or the
+    traditional engine's chunk-major ``(M, P, F, A, B, R)`` when
+    ``pack=True`` — then for int8 the per-(field, chunk) f32 scales, then
+    (``guard=True``) per-(field, chunk) ``(nonfinite, saturated)`` counts.
+    Scale/stats are laid out ``(F, M)`` for the in-place payload and
+    ``(M, F)`` for the packed one, matching each payload's leading order so
+    the scale all-to-all uses the same split axis as the payload's.
+    """
+    P, F, A, M, B, R = view_shape
+    in_spec = pl.BlockSpec(_blocked(view_shape, 1, 3), _one_hot_map(6, 1, 3))
+    if pack:
+        q_shape = (M, P, F, A, B, R)
+        q_spec = pl.BlockSpec(_blocked(q_shape, 2, 0), _one_hot_map(6, 2, 0))
+        scale_shape, smap = (M, F), lambda i, j: (j, i)
+    else:
+        q_shape = view_shape
+        q_spec = pl.BlockSpec(_blocked(q_shape, 1, 3), _one_hot_map(6, 1, 3))
+        scale_shape, smap = (F, M), lambda i, j: (i, j)
+
+    out_specs = [q_spec]
+    out_shapes = [jax.ShapeDtypeStruct(q_shape, _WIRE_DTYPES[codec])]
+    if codec == "int8":
+        out_specs.append(pl.BlockSpec((1, 1), smap))
+        out_shapes.append(jax.ShapeDtypeStruct(scale_shape, jnp.float32))
+    if guard:
+        out_specs.append(pl.BlockSpec((1, 1, 2), lambda i, j: (*smap(i, j), 0)))
+        out_shapes.append(jax.ShapeDtypeStruct((*scale_shape, 2), jnp.float32))
+
+    def body(x_ref, *out_refs):
+        refs = list(out_refs)
+        q_ref = refs.pop(0)
+        s_ref = refs.pop(0) if codec == "int8" else None
+        st_ref = refs.pop(0) if guard else None
+        q, scale, nonfinite, saturated = _encode_block(x_ref[...], codec, scale_div)
+        q_ref[...] = q.reshape(q_ref.shape)
+        if s_ref is not None:
+            s_ref[0, 0] = scale
+        if st_ref is not None:
+            st_ref[0, 0, 0] = nonfinite
+            st_ref[0, 0, 1] = saturated
+
+    return pl.pallas_call(
+        body,
+        grid=(F, M),
+        in_specs=[in_spec],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+
+
+def decode_pallas_call(view_shape, *, codec: str, interpret: bool):
+    """Build the fused decode kernel for a received ``(P, F, A, M, WB, R)``
+    payload view (``M`` = sender-chunk axis of the tiled concat): widen back
+    to f32, for int8 dequantizing chunk ``j`` with sender ``j``'s scale
+    (a second ``(F, M)`` input)."""
+    P, F, A, M, WB, R = view_shape
+    spec = pl.BlockSpec(_blocked(view_shape, 1, 3), _one_hot_map(6, 1, 3))
+    in_specs = [spec]
+    if codec == "int8":
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (i, j)))
+
+    def body(q_ref, *rest):
+        if codec == "int8":
+            s_ref, o_ref = rest
+            o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+        else:
+            (o_ref,) = rest
+            o_ref[...] = q_ref[...].astype(jnp.float32)
+
+    return pl.pallas_call(
+        body,
+        grid=(F, M),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec(_blocked(view_shape, 1, 3), _one_hot_map(6, 1, 3))],
+        out_shape=[jax.ShapeDtypeStruct(view_shape, jnp.float32)],
+        interpret=interpret,
+    )
+
+
+def unpack_decode_pallas_call(in_shape, out_shape, *, m_out: int, codec: str,
+                              interpret: bool):
+    """Build the traditional engine's fused unpack: the received chunk-major
+    payload ``(M, P, F, ...)`` is scattered into its w-slot (the Eq. 17
+    realignment, expressed purely as the output index map) while
+    dequantizing/widening.  ``out_shape`` carries ``(P, F, ...)`` leading
+    with the chunk axis re-inserted at ``m_out`` (just before the w-shard
+    axis: chunk-major == global w order); for int8 the ``(M, F)`` scales
+    received alongside ride as a second input."""
+    in_specs = [pl.BlockSpec(_blocked(in_shape, 2, 0), _one_hot_map(len(in_shape), 2, 0))]
+    if codec == "int8":
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j: (j, i)))
+
+    def body(q_ref, *rest):
+        if codec == "int8":
+            s_ref, o_ref = rest
+            o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]).reshape(o_ref.shape)
+        else:
+            (o_ref,) = rest
+            o_ref[...] = q_ref[...].astype(jnp.float32).reshape(o_ref.shape)
+
+    return pl.pallas_call(
+        body,
+        grid=(in_shape[2], in_shape[0]),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec(_blocked(out_shape, 1, m_out),
+                                _one_hot_map(len(out_shape), 1, m_out))],
+        out_shape=[jax.ShapeDtypeStruct(out_shape, jnp.float32)],
+        interpret=interpret,
+    )

@@ -1,0 +1,112 @@
+"""jnp reference semantics for the fused exchange kernels.
+
+Each function mirrors one :mod:`repro.kernels.exchange.ops` entry point
+exactly — same arguments, same plane/payload layouts, same scale blocking —
+but is built from the :mod:`repro.core.quant` codec plus explicit
+``moveaxis`` realignment (the multi-pass path the kernels fuse away).
+The parity suite (``tests/test_exchange_kernels.py``) asserts the kernels
+match these bitwise for bf16 (a pure elementwise cast), and for int8 up to
+one ULP of the per-block scale: the kernel bodies run the identical codec
+math over the identical (field, chunk) scale blocks, but XLA may compile
+the ``amax / 127`` constant division differently inside and outside the
+kernel (reciprocal-multiply rewrite), shifting a scale by one ULP and —
+at an exact round-to-half boundary — a payload element by one quantum.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def _prod(xs) -> int:
+    return int(math.prod(xs))
+
+
+def _to_planes(y: jax.Array) -> jax.Array:
+    if jnp.iscomplexobj(y):
+        return quant.complex_to_planes(y)
+    return y.astype(jnp.float32)[None]
+
+
+def _from_planes(p: jax.Array, iscomplex: bool) -> jax.Array:
+    if iscomplex:
+        return quant.planes_to_complex(p)
+    return p[0]
+
+
+def _view6(shape, axis: int, m: int, nbatch: int):
+    P, s = shape[0], shape[1:]
+    return (P, _prod(s[:nbatch]), _prod(s[nbatch:axis]), m, s[axis] // m,
+            _prod(s[axis + 1:]))
+
+
+def encode_payload_ref(y, *, axis, m, nbatch=0, codec, guard=False, scale_div=None):
+    planes = _to_planes(y)
+    P, F, A, M, B, R = view = _view6(planes.shape, axis, m, nbatch)
+    x6 = planes.reshape(view)
+    if codec == "bf16":
+        stats = ({"nonfinite": jnp.sum(~jnp.isfinite(x6), dtype=jnp.float32),
+                  "saturated": jnp.zeros((), jnp.float32)} if guard else None)
+        return quant.encode_bf16(x6).reshape(planes.shape), None, stats
+    if guard:
+        q, sc, stats = quant.quantize_int8(x6, block_axis=(1, 3),
+                                           scale_div=scale_div, with_stats=True)
+    else:
+        q, sc = quant.quantize_int8(x6, block_axis=(1, 3), scale_div=scale_div)
+        stats = None
+    return q.reshape(planes.shape), sc.reshape(F, M), stats
+
+
+def decode_payload_ref(p, *, axis, m, nbatch=0, scale, codec, iscomplex):
+    P, F, A, M, WB, R = view = _view6(p.shape, axis, m, nbatch)
+    x6 = p.reshape(view)
+    if codec == "int8":
+        out = quant.dequantize_int8(x6, scale.reshape(1, F, 1, M, 1, 1))
+    else:
+        out = quant.decode_bf16(x6)
+    return _from_planes(out.reshape(p.shape), iscomplex)
+
+
+def pack_chunks_ref(y, *, axis, m, nbatch=0, codec, guard=False, scale_div=None):
+    planes = _to_planes(y)
+    P, F, A, M, B, R = view = _view6(planes.shape, axis, m, nbatch)
+    q, scale, stats = encode_payload_ref(y, axis=axis, m=m, nbatch=nbatch,
+                                         codec=codec, guard=guard,
+                                         scale_div=scale_div)
+    # the pack realignment the kernel's output index map replaces:
+    packed = jnp.moveaxis(q.reshape(view), 3, 0)
+    s = list(planes.shape[1:])
+    s[axis] = B
+    if scale is not None:
+        scale = jnp.moveaxis(scale, 1, 0)  # (F, M) -> (M, F)
+    return packed.reshape((M, P, *s)), scale, stats
+
+
+def unpack_chunks_ref(p, *, v, w, m, nbatch=0, scale, codec, iscomplex):
+    M, P = p.shape[0], p.shape[1]
+    s = p.shape[2:]
+    bv, bw = v + nbatch, w + nbatch
+    F = _prod(s[:nbatch])
+    if bw < bv:
+        in_view = (M, P, F, _prod(s[nbatch:bw]), s[bw],
+                   _prod(s[bw + 1:bv]), s[bv], _prod(s[bv + 1:]))
+        m_out = 3
+    else:
+        in_view = (M, P, F, _prod(s[nbatch:bv]), s[bv],
+                   _prod(s[bv + 1:bw]), s[bw], _prod(s[bw + 1:]))
+        m_out = 5
+    x8 = p.reshape(in_view)
+    if codec == "int8":
+        out = quant.dequantize_int8(x8, scale.reshape(M, 1, F, 1, 1, 1, 1, 1))
+    else:
+        out = quant.decode_bf16(x8)
+    # the unpack realignment the kernel's output index map replaces:
+    out = jnp.moveaxis(out, 0, m_out)
+    final = list(s)
+    final[bw] = M * s[bw]
+    return _from_planes(out.reshape((P, *final)), iscomplex)

@@ -14,8 +14,9 @@ error, never a silently corrupted spectrum.
 re-executes, bounded by :data:`MAX_ATTEMPTS`:
 
 * a *tripped stage* widens that stage's wire payload one rung
-  (int8 → bf16 → complex64) before falling back through the engines
-  (pipelined → fused → traditional);
+  (int8 → bf16 → complex64), then drops a fused Pallas exchange kernel
+  back to the jnp reference impl (pallas → jnp), before falling back
+  through the engines (pipelined → fused → traditional);
 * a *global* trip (Parseval, non-finite output) degrades every stage;
 * a *failed execution* of a ``method="auto"`` plan quarantines the cache
   entry that produced the schedule (schema-v5 per-entry ``bad`` mark, see
@@ -39,8 +40,8 @@ from repro.robustness import faults, health
 log = logging.getLogger("repro.robustness")
 
 #: hard cap on executions per guarded call (ladder depth is at most
-#: 2 payload rungs + 2 engine rungs; +headroom for retunes)
-MAX_ATTEMPTS = 6
+#: 2 payload rungs + 1 impl rung + 2 engine rungs; +headroom for retunes)
+MAX_ATTEMPTS = 8
 
 #: one-rung payload widening (lossier -> less lossy)
 DTYPE_LADDER = {"int8": "bf16", "bf16": "complex64"}
@@ -60,14 +61,20 @@ class GuardError(RuntimeError):
 
 
 def degrade_entry(entry):
-    """One ladder rung for a (method, chunks, comm_dtype, batch_fusion)
-    entry; None when the entry is already at the bottom (traditional @
-    complex64)."""
-    method, chunks, dtype, fusion = entry
-    if dtype in DTYPE_LADDER:
-        return (method, chunks, DTYPE_LADDER[dtype], fusion)
-    if method in ENGINE_LADDER:
-        return (ENGINE_LADDER[method], 1, dtype, fusion)
+    """One ladder rung for a :class:`~repro.core.planconfig.StageEntry`
+    (any legacy tuple form upgrades first): widen the payload, then drop
+    a fused pallas kernel back to the jnp reference, then fall back
+    through the engines; None when the entry is already at the bottom
+    (traditional @ complex64 @ jnp)."""
+    from repro.core.planconfig import StageEntry
+
+    e = StageEntry.make(entry)
+    if e.comm_dtype in DTYPE_LADDER:
+        return e._replace(comm_dtype=DTYPE_LADDER[e.comm_dtype])
+    if e.impl == "pallas":
+        return e._replace(impl="jnp")
+    if e.method in ENGINE_LADDER:
+        return e._replace(method=ENGINE_LADDER[e.method], chunks=1)
     return None
 
 
@@ -88,10 +95,10 @@ def degrade_schedule(schedule, stages=None):
 
 
 def _resolve_schedule(plan, nfields: int):
-    from repro.core.pfft import _sched_entry
+    from repro.core.planconfig import as_schedule
 
     sched = plan.batched_schedule(nfields) if nfields > 1 else plan.schedule
-    return tuple(_sched_entry(e) for e in sched)
+    return as_schedule(sched)
 
 
 def _quarantine_and_retune(plan, nfields: int, err) -> int:

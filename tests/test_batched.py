@@ -182,9 +182,10 @@ mesh = make_mesh((2, 2), ("p0", "p1"))
 plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto", tuner_cache=cache)
 bs = plan.batched_schedule(3)
 assert len(bs) == plan.n_exchanges == 2
-for method, chunks, comm_dtype, fusion in bs:
+for method, chunks, comm_dtype, impl, fusion in bs:
     assert method in ("fused", "traditional", "pipelined")
     assert comm_dtype == "complex64"  # lossless budget
+    assert impl == "jnp"  # no pallas budget requested
     assert fusion in ("stacked", "pipelined-across-fields", "per-field")
 
 disk = json.loads(open(cache).read())

@@ -143,7 +143,9 @@ plan = ParallelFFT(mesh, shape, ("p0", "p1"), method="auto",
 mixed = [["traditional", 1, "complex64"], ["pipelined", 2, "bf16"]]
 Path(cache).write_text(json.dumps(
     {tuner.plan_key(plan): {"schedule": mixed, "timings": {}}}))
-assert plan.schedule == tuple(tuple(s) for s in mixed)
+# legacy 3-field disk rows upgrade to full StageEntry rows on load
+from repro.core.planconfig import as_schedule
+assert plan.schedule == as_schedule(mixed)
 
 # backward executor: same schedule, reversed stage order
 bwd_sched = plan._backward_shard.keywords["schedule"]

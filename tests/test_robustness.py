@@ -28,28 +28,36 @@ from repro.robustness.runner import degrade_entry, degrade_schedule
 # ---------------------------------------------------------------------------
 
 
-def test_degrade_entry_walks_payload_then_engine():
-    """int8 -> bf16 -> complex64, then pipelined -> fused -> traditional
-    (chunks collapse to 1 with the engine), then the bottom (None)."""
-    e = ("pipelined", 4, "int8", "stacked")
+def test_degrade_entry_walks_payload_then_impl_then_engine():
+    """int8 -> bf16 -> complex64, then pallas -> jnp, then pipelined ->
+    fused -> traditional (chunks collapse to 1 with the engine), then the
+    bottom (None)."""
+    e = ("pipelined", 4, "int8", "pallas", "stacked")
     seen = []
     while e is not None:
-        seen.append(e)
+        seen.append(tuple(e))
         e = degrade_entry(e)
     assert seen == [
-        ("pipelined", 4, "int8", "stacked"),
-        ("pipelined", 4, "bf16", "stacked"),
-        ("pipelined", 4, "complex64", "stacked"),
-        ("fused", 1, "complex64", "stacked"),
-        ("traditional", 1, "complex64", "stacked"),
+        ("pipelined", 4, "int8", "pallas", "stacked"),
+        ("pipelined", 4, "bf16", "pallas", "stacked"),
+        ("pipelined", 4, "complex64", "pallas", "stacked"),
+        ("pipelined", 4, "complex64", "jnp", "stacked"),
+        ("fused", 1, "complex64", "jnp", "stacked"),
+        ("traditional", 1, "complex64", "jnp", "stacked"),
     ]
+    # legacy 4-tuple entries upgrade in place (jnp impl) and walk the
+    # same ladder
+    assert tuple(degrade_entry(("pipelined", 4, "int8", "stacked"))) == (
+        "pipelined", 4, "bf16", "jnp", "stacked")
 
 
 def test_degrade_schedule_targets_only_named_stages():
     sched = (("fused", 1, "int8", "stacked"), ("fused", 1, "int8", "stacked"))
     new = degrade_schedule(sched, stages=(1,))
+    # untargeted entries pass through as-is; degraded ones come back as
+    # full 5-field StageEntry rows
     assert new == (("fused", 1, "int8", "stacked"),
-                   ("fused", 1, "bf16", "stacked"))
+                   ("fused", 1, "bf16", "jnp", "stacked"))
 
 
 def test_degrade_schedule_exhaustion():
@@ -62,7 +70,7 @@ def test_degrade_schedule_exhaustion():
     assert degrade_schedule(mixed, stages=(0,)) is None
     assert degrade_schedule(mixed) == (
         ("traditional", 1, "complex64", "stacked"),
-        ("fused", 1, "bf16", "stacked"))
+        ("fused", 1, "bf16", "jnp", "stacked"))
 
 
 def test_guard_mode_validated():

@@ -1,6 +1,7 @@
 """Exchange-schedule autotuner: candidate sweep (engines × comm_dtype
-payloads × batch fusions), schema-v5 disk cache round-trip, stale-cache
-migration, atomic merge writes, quarantine marks."""
+payloads × exchange impls × batch fusions), schema-v6 disk cache
+round-trip, stale-cache migration, atomic merge writes, quarantine
+marks."""
 
 import json
 import threading
@@ -24,11 +25,13 @@ mesh = make_mesh((2, 2), ("p0", "p1"))
 plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto", tuner_cache=cache)
 sched = plan.schedule
 assert len(sched) == plan.n_exchanges == 2
-for method, chunks, comm_dtype in sched:
+for method, chunks, comm_dtype, impl, fusion in sched:
     assert method in ("fused", "traditional", "pipelined")
     assert chunks >= 1
     # default accuracy budget is lossless: only complex64 may be picked
     assert comm_dtype == "complex64"
+    # no pallas budget requested: every entry runs the jnp reference impl
+    assert impl == "jnp" and fusion == "stacked"
 
 disk = json.loads(open(cache).read())
 key = tuner.plan_key(plan)
@@ -41,7 +44,7 @@ stages = disk[key]["timings"]
 assert len(stages) == 2
 for per in stages.values():
     timed = {{k: v for k, v in per.items() if ":" not in k}}  # drop error notes
-    assert set(timed) == {{f"{{m}}@{{c}}@{{d}}" for m, c, d in tuner.DEFAULT_CANDIDATES}}
+    assert set(timed) == {{tuner._tag(c) for c in tuner.DEFAULT_CANDIDATES}}
     assert all(t > 0 for t in timed.values())
 
 # fresh-memo reload: poison tune_plan; a cache hit must not call it
@@ -74,16 +77,16 @@ plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
                    comm_dtype="int8", tuner_cache=cache)
 sched = plan.schedule
 assert len(sched) == 2
-for method, chunks, comm_dtype in sched:
+for method, chunks, comm_dtype, impl, fusion in sched:
     assert comm_dtype in ("complex64", "bf16", "int8")
 
 disk = json.loads(open(cache).read())
 key = tuner.plan_key(plan)
-want_tags = {{f"{{m}}@{{c}}@{{d}}" for m, c, d in tuner.candidates_for("int8")}}
+want_tags = {{tuner._tag(c) for c in tuner.candidates_for("int8")}}
 for per in disk[key]["timings"].values():
     assert {{k for k in per if ":" not in k}} == want_tags
 
-# a fresh process (memo empty) must reload the same 3-field schedule
+# a fresh process (memo empty) must reload the same schedule
 tuner._MEMO.clear()
 tuner.tune_plan = None  # cache hit must not benchmark
 plan2 = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
@@ -127,7 +130,7 @@ for payload in stale_payloads:
     disk = json.loads(cache.read_text())  # rewritten as valid JSON
     key = tuner.plan_key(plan)
     assert key in disk
-    assert json.loads(key)["schema"] == tuner.SCHEMA_VERSION == 5
+    assert json.loads(key)["schema"] == tuner.SCHEMA_VERSION == 6
     print("ok", payload[:30])
 
 # a *matching* v4 key whose entry body is junk must also fall back to
@@ -148,7 +151,7 @@ for bad_entry in ("garbage", {{"schedule": "garbage"}}, {{"schedule": [["x"]]}},
     p = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"), method="auto",
                     tuner_cache=str(cache))
     sched = p.schedule
-    assert len(sched) == 2 and all(len(e) == 3 for e in sched)
+    assert len(sched) == 2 and all(len(e) == 5 for e in sched)
     disk = json.loads(cache.read_text())
     assert [tuple(s) for s in disk[key]["schedule"]] == list(sched)
 
@@ -210,19 +213,27 @@ def test_candidates_cover_issue_matrix():
     for c in (2, 4, 8):
         assert ("pipelined", c) in tuner.ENGINE_CANDIDATES
     # default budget is lossless
-    assert set(d for _, _, d in tuner.DEFAULT_CANDIDATES) == {"complex64"}
+    assert set(e.comm_dtype for e in tuner.DEFAULT_CANDIDATES) == {"complex64"}
     # the ladder is monotone: each budget adds payloads, never drops them
     assert set(tuner.candidates_for("bf16")) > set(tuner.candidates_for(None))
     assert set(tuner.candidates_for("int8")) > set(tuner.candidates_for("bf16"))
-    for m, c, d in tuner.candidates_for("int8"):
-        assert (m, c) in tuner.ENGINE_CANDIDATES
-        assert d in ("complex64", "bf16", "int8")
+    for e in tuner.candidates_for("int8"):
+        assert (e.method, e.chunks) in tuner.ENGINE_CANDIDATES
+        assert e.comm_dtype in ("complex64", "bf16", "int8")
+        assert e.impl == "jnp"  # no pallas budget requested
+    # a pallas budget adds fused-kernel candidates for every lossy payload
+    pall = tuner.candidates_for("int8", "pallas")
+    assert set(pall) > set(tuner.candidates_for("int8"))
+    extra = set(pall) - set(tuner.candidates_for("int8"))
+    assert extra and all(e.impl == "pallas" and e.comm_dtype != "complex64"
+                         for e in extra)
     # batched candidates: every single-field candidate x every fusion mode
     batched = tuner.batched_candidates_for("bf16")
     assert len(batched) == 3 * len(tuner.candidates_for("bf16"))
-    assert {f for _, _, _, f in batched} == {
+    assert {e.batch_fusion for e in batched} == {
         "stacked", "pipelined-across-fields", "per-field"}
-    assert {(m, c, d) for m, c, d, _ in batched} == set(tuner.candidates_for("bf16"))
+    assert {e._replace(batch_fusion="stacked") for e in batched} == set(
+        tuner.candidates_for("bf16"))
 
 
 def test_save_cache_atomic(tmp_path):
@@ -252,3 +263,118 @@ def test_save_cache_atomic(tmp_path):
     # no temp files left behind
     leftovers = [p for p in path.parent.iterdir() if p.name != path.name]
     assert leftovers == []
+
+
+def test_v5_entry_migrates_without_retune(subproc, tmp_path):
+    """A healthy schema-5 cache entry (3-field jnp rows) must be *migrated*
+    to v6 — upgraded through StageEntry.make and re-saved under the v6 key
+    with ``migrated_from_schema: 5`` — never re-benchmarked: the jnp-only
+    candidate space is unchanged, so the v5 timings stay valid.  An
+    ``exchange_impl="pallas"`` budget must refuse the migration (its v6
+    candidate set sweeps kernels the v5 run never measured) and retune."""
+    cache = tmp_path / "fft_tuner.json"
+    code = f"""
+import json
+from pathlib import Path
+from repro.core import tuner
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+from repro.core.planconfig import PlanConfig
+
+cache = Path({str(cache)!r})
+mesh = make_mesh((2, 2), ("p0", "p1"))
+mk = lambda **kw: ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"),
+                              config=PlanConfig(method="auto",
+                                                tuner_cache=str(cache), **kw))
+plan = mk()
+
+# hand-build the v5 cache file: schema-5 key, 3-field schedule rows, the
+# legacy jnp-only candidate tags
+fields = tuner._key_fields(plan, 1)
+fields["schema"] = 5
+fields["candidates"] = sorted(
+    tuner._tag(c) for c in tuner._legacy_v5_candidates(plan, 1))
+legacy_key = json.dumps(fields, sort_keys=True, default=str)
+v5_sched = [["fused", 1, "complex64"], ["traditional", 1, "complex64"]]
+v5_timings = {{"stage1": {{"fused@1@complex64": 1e-4}}}}
+cache.write_text(json.dumps(
+    {{legacy_key: {{"schedule": v5_sched, "timings": v5_timings}}}}))
+
+# poison tune_plan: a migration that falls back to benchmarking is a bug
+real_tune = tuner.tune_plan
+def boom(*a, **k):
+    raise AssertionError("v5 migration fell back to retuning")
+tuner.tune_plan = boom
+tuner._MEMO.clear()
+sched = mk().schedule
+assert [list(s) for s in sched] == [s + ["jnp", "stacked"] for s in v5_sched]
+
+disk = json.loads(cache.read_text())
+v6_key = tuner.plan_key(plan)
+assert v6_key in disk and legacy_key in disk  # migrated copy, original kept
+assert disk[v6_key]["migrated_from_schema"] == 5
+assert disk[v6_key]["timings"] == v5_timings  # timings carried over
+assert [tuple(s) for s in disk[v6_key]["schedule"]] == list(sched)
+
+# a quarantined v5 entry must NOT migrate (the mark is the whole point)
+cache.write_text(json.dumps({{legacy_key: {{
+    "schedule": v5_sched, "timings": {{}}, "bad": {{"reason": "x"}}}}}}))
+tuner._MEMO.clear()
+try:
+    mk().schedule
+    raise SystemExit("quarantined v5 entry was replayed")
+except AssertionError as e:
+    assert "retuning" in str(e)
+
+# pallas budget: v5 never measured the kernel candidates -> must retune
+cache.write_text(json.dumps(
+    {{legacy_key: {{"schedule": v5_sched, "timings": v5_timings}}}}))
+tuner._MEMO.clear()
+try:
+    mk(exchange_impl="pallas").schedule
+    raise SystemExit("pallas budget migrated a jnp-only v5 entry")
+except AssertionError as e:
+    assert "retuning" in str(e)
+tuner.tune_plan = real_tune
+print("V5 MIGRATION OK")
+"""
+    out = subproc(code, ndev=4)
+    assert "V5 MIGRATION OK" in out
+
+
+def test_committed_v5_fixture_migrates(subproc, tmp_path):
+    """The committed v5 cache fixture (tests/data/fft_tuner_v5.json,
+    generated on the cpu backend the CI matrix runs) must resolve its
+    plan's schedule by migration alone — tune_plan poisoned — proving old
+    user caches survive the v6 schema bump without a retune."""
+    import shutil
+    from pathlib import Path
+
+    fixture = Path(__file__).parent / "data" / "fft_tuner_v5.json"
+    cache = tmp_path / "fft_tuner.json"
+    shutil.copy(fixture, cache)
+    code = f"""
+import json
+from pathlib import Path
+from repro.core import tuner
+from repro.core.meshutil import make_mesh
+from repro.core.pfft import ParallelFFT
+from repro.core.planconfig import PlanConfig
+
+cache = Path({str(cache)!r})
+def boom(*a, **k):
+    raise AssertionError("committed v5 cache was not migrated: tune_plan ran")
+tuner.tune_plan = boom
+mesh = make_mesh((2, 2), ("p0", "p1"))
+plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"),
+                   config=PlanConfig(method="auto", tuner_cache=str(cache)))
+sched = plan.schedule
+assert [list(s) for s in sched] == [["fused", 1, "complex64", "jnp", "stacked"],
+                                    ["traditional", 1, "complex64", "jnp", "stacked"]]
+disk = json.loads(cache.read_text())
+v6 = disk[tuner.plan_key(plan)]
+assert v6["migrated_from_schema"] == 5 and v6["timings"]
+print("COMMITTED V5 FIXTURE OK")
+"""
+    out = subproc(code, ndev=4)
+    assert "COMMITTED V5 FIXTURE OK" in out
