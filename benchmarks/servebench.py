@@ -1,0 +1,138 @@
+"""Serve-path benchmark: coalesced batched dispatch vs a per-request loop.
+
+The serving engine's throughput claim is that coalescing N concurrent
+same-shape requests into one ``forward_many`` invocation (one collective
+per exchange stage for the whole group, one trace/dispatch instead of N)
+beats dispatching the same N requests one at a time.  This script measures
+exactly that on the clean path: the *same* :class:`SpectralServer`, same
+plan, same request stream — once with ``max_batch=N`` (coalesced) and once
+with ``max_batch=1`` (per-request loop) — reporting best-of-``--repeats``
+wall time from first submit to last resolved future (the paper's
+fastest-of-outers convention).
+
+Writes a ``serve-bench-v1`` record (git SHA + device provenance stamped):
+
+    python -m benchmarks.servebench --ndev 8 --shape 32,32,32 \
+        --requests 6 --out benchmarks/BENCH_pr9.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _measure(srv, xs, *, deadline_s: float):
+    t0 = time.perf_counter()
+    futs = [srv.submit(x, deadline_s=deadline_s) for x in xs]
+    outs = [f.result(grace=5.0) for f in futs]
+    dt = time.perf_counter() - t0
+    bad = [o.status for o in outs if o.status != "ok"]
+    if bad:
+        raise RuntimeError(f"clean-path bench saw non-ok outcomes: {bad}")
+    return dt, outs
+
+
+def bench(shape, grid, requests, repeats, deadline_s):
+    import numpy as np
+
+    from repro.core.meshutil import balanced_dims, make_mesh
+    from repro.core.planconfig import PlanConfig
+    from repro.serve import ServeConfig, SpectralServer
+
+    import jax
+
+    ndev = len(jax.devices())
+    if grid == "slab":
+        mesh, mgrid = make_mesh((ndev,), ("p0",)), ("p0",)
+    else:
+        mesh = make_mesh(balanced_dims(ndev), ("p0", "p1"))
+        mgrid = ("p0", "p1")
+    pc = PlanConfig(method="fused", guard="degrade")
+    rng = np.random.default_rng(0)
+    xs = [rng.standard_normal(shape).astype(np.float32)
+          for _ in range(requests)]
+
+    results = {}
+    for label, max_batch in (("coalesced", requests), ("per_request", 1)):
+        sc = ServeConfig(deadline_s=deadline_s, max_batch=max_batch,
+                         max_queue=4 * requests)
+        with SpectralServer(mesh, mgrid, plan_config=pc, config=sc) as srv:
+            _measure(srv, xs, deadline_s=deadline_s)  # warm compile both paths
+            best, batched = None, 0
+            for _ in range(repeats):
+                dt, outs = _measure(srv, xs, deadline_s=deadline_s)
+                if best is None or dt < best:
+                    best = dt
+                    batched = max(o.batched for o in outs)
+            stats = srv.stats()
+        results[label] = {
+            "best_wall_s": best,
+            "req_per_s": requests / best,
+            "max_group": batched,
+            "coalesced_batches": stats["coalesced_batches"],
+        }
+    return ndev, results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", default="32,32,32")
+    ap.add_argument("--grid", choices=["slab", "pencil"], default="slab")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--deadline", type=float, default=300.0)
+    ap.add_argument("--ndev", type=int, default=8,
+                    help="virtual host devices (sets XLA_FLAGS if unset)")
+    ap.add_argument("--pr", type=int, default=9)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.ndev}")
+
+    shape = tuple(int(s) for s in args.shape.split(","))
+    ndev, results = bench(shape, args.grid, args.requests, args.repeats,
+                          args.deadline)
+
+    import jax
+
+    from benchmarks.normalize_bench import git_sha
+
+    speedup = (results["per_request"]["best_wall_s"]
+               / results["coalesced"]["best_wall_s"])
+    record = {
+        "schema": "serve-bench-v1",
+        "pr": args.pr,
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "ndev": ndev,
+        "shape": list(shape),
+        "grid": args.grid,
+        "requests": args.requests,
+        "repeats": args.repeats,
+        "guard_mode": "degrade",
+        "coalesced": results["coalesced"],
+        "per_request": results["per_request"],
+        "coalesced_speedup": speedup,
+    }
+    blob = json.dumps(record, indent=1, sort_keys=True)
+    print(blob)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+    # acceptance: coalesced batched throughput >= the per-request loop
+    if speedup < 1.0:
+        print(f"WARNING: coalesced path slower than per-request loop "
+              f"(speedup {speedup:.3f})", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

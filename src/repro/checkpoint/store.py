@@ -162,30 +162,55 @@ def load_checkpoint(directory: str | os.PathLike, tree_like, *, step: int | None
     raise IOError(f"every checkpoint under {directory} is corrupt — {detail}")
 
 
+class AsyncCheckpointError(RuntimeError):
+    """A background ``save_async`` write failed.  ``step`` names the
+    checkpoint whose write died; ``__cause__`` carries the original
+    exception.  Raised by the *next* ``wait()``/``save_async()`` call —
+    a failed background checkpoint can never pass silently."""
+
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(
+            f"async checkpoint write for step {step} failed: {cause!r}")
+        self.step = step
+
+
 class CheckpointManager:
-    """Async checkpointing with at-most-one outstanding write."""
+    """Async checkpointing with at-most-one outstanding write.
+
+    Failure surfacing: a worker-thread exception is recorded (wrapped in
+    :class:`AsyncCheckpointError` with the failing step) and re-raised on
+    the next ``wait()`` or ``save_async()`` call — ``save_async`` waits on
+    the previous write *before* snapshotting, so the error surfaces before
+    any new write is admitted.  A manager garbage-collected with an
+    unsurfaced error emits a ``RuntimeWarning`` as a last resort."""
 
     def __init__(self, directory: str | os.PathLike, keep: int = 3):
         self.directory = Path(directory)
         self.keep = keep
         self._thread: threading.Thread | None = None
-        self._error: BaseException | None = None
+        self._error: AsyncCheckpointError | None = None
 
     def save_async(self, step: int, tree, *, extra: dict | None = None):
-        self.wait()  # serialize writes; snapshot below is the sync part
+        # serialize writes AND surface any previous write's failure before
+        # admitting this one; snapshot below is the sync part
+        self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
             try:
                 save_checkpoint(self.directory, step, host_tree, extra=extra,
                                 keep=self.keep)
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+            except BaseException as e:  # surfaced on next wait()/save_async()
+                err = AsyncCheckpointError(step, e)
+                err.__cause__ = e
+                self._error = err
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self):
+        """Join the outstanding write, re-raising its failure (if any) as
+        :class:`AsyncCheckpointError`."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -195,3 +220,12 @@ class CheckpointManager:
 
     def latest_step(self):
         return latest_step(self.directory)
+
+    def __del__(self):
+        err = getattr(self, "_error", None)
+        if err is not None:  # pragma: no cover - interpreter-shutdown timing
+            import warnings
+
+            warnings.warn(f"CheckpointManager dropped without surfacing a "
+                          f"failed async write: {err}", RuntimeWarning,
+                          stacklevel=1)

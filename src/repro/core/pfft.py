@@ -444,6 +444,40 @@ class ParallelFFT:
                 check_vma=False)
         return self._guarded_exec[key]
 
+    def warm(self, directions=("forward", "backward"), *,
+             nfields: int = 1) -> int:
+        """Precompile the plan's hot executors by running each requested
+        direction once on a zero block — schedule resolution (including a
+        tuner sweep for ``method="auto"``), tracing, compilation and
+        weight transfer all happen here instead of on the first real
+        request (the serving registry's warm start).  Guarded plans warm
+        the guarded executor — the one :func:`~repro.robustness.runner.
+        run_guarded` dispatches to; ``nfields > 1`` warms the batched
+        multi-field executor for that batch size.  Returns the number of
+        executors exercised."""
+        n = 0
+        for direction in directions:
+            if direction == "forward":
+                pen, dt = self.input_pencil, self.input_dtype
+            elif direction == "backward":
+                pen, dt = self.output_pencil, self.spectral_dtype
+            else:
+                raise ValueError(f"unknown direction {direction!r}")
+            shape = ((nfields,) if nfields > 1 else ()) + pen.physical
+            shard = pen.batched_sharding(1) if nfields > 1 else pen.sharding
+            xpad = jax.device_put(jnp.zeros(shape, dt), shard)
+            if self.guard != "off":
+                out = self.guarded_padded(direction, nfields=nfields)(xpad)
+            elif nfields > 1:
+                out = self._many_padded(nfields, direction)(xpad)
+            elif direction == "forward":
+                out = self.forward_padded(xpad)
+            else:
+                out = self.backward_padded(xpad)
+            jax.block_until_ready(out)
+            n += 1
+        return n
+
     def forward(self, x: jax.Array) -> jax.Array:
         """Logical-shape convenience wrapper (pads, transforms, unpads).
         A ``d+1``-dim input is treated as a stack of fields along a leading

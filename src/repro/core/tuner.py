@@ -70,11 +70,17 @@ an in-process memo avoids re-reading the file per plan.
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
 import time
 from pathlib import Path
+
+try:  # POSIX advisory locks; absent on some platforms (lock becomes a no-op)
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
 
 import jax
 import jax.numpy as jnp
@@ -198,30 +204,64 @@ def load_cache(path: Path) -> dict:
     return data if isinstance(data, dict) else {}
 
 
-def save_cache(path: Path, data: dict, *, merge: bool = True) -> bool:
+@contextlib.contextmanager
+def _file_lock(path: Path):
+    """Cross-process advisory lock (``fcntl.flock`` on ``<path>.lock``)
+    serializing the read-merge-write cycle against concurrent serve
+    replicas sharing one schedule DB.  Atomic replace alone only prevents
+    torn *reads*; two processes interleaving read→merge→replace can still
+    drop each other's keys.  No-op when ``fcntl`` is unavailable or the
+    lock file cannot be created (read-only FS) — behavior then degrades to
+    the previous merge-on-save semantics, never an error.  flock is held
+    per open-file-description, so callers must not nest this for the same
+    path within one process (see :func:`quarantine` → ``lock=False``)."""
+    if fcntl is None:
+        yield
+        return
+    try:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd = os.open(str(path) + ".lock", os.O_RDWR | os.O_CREAT, 0o644)
+    except OSError:
+        yield
+        return
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        os.close(fd)  # closing releases the flock
+
+
+def save_cache(path: Path, data: dict, *, merge: bool = True,
+               lock: bool = True) -> bool:
     """Atomically write cache entries: write a temp file in the same
     directory, then ``os.replace`` — readers can never observe partial
     JSON.  With ``merge=True`` (default) the writer first re-reads the file
     and overlays only the keys in ``data``, so a worker that tuned plan A
     no longer erases the entry a concurrent worker just wrote for plan B
-    (the pre-v5 last-writer-wins clobber); racing writers of the *same*
-    key still last-write-wins, which is benign — both hold valid timings.
+    (the pre-v5 last-writer-wins clobber).  The read-merge-write cycle
+    runs under :func:`_file_lock` (``lock=True``), closing the remaining
+    cross-process interleave where two racing writers both read the same
+    snapshot and the second replace drops the first writer's keys; pass
+    ``lock=False`` only when the caller already holds the lock.
     ``merge=False`` replaces the whole file (tests / explicit resets)."""
     try:
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
-        if merge:
-            current = load_cache(path)
-            current.update(data)
-            data = current
-        fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(json.dumps(data, indent=1))
-            os.replace(tmp, path)
-        except BaseException:
-            os.unlink(tmp)
-            raise
+        with _file_lock(path) if lock else contextlib.nullcontext():
+            if merge:
+                current = load_cache(path)
+                current.update(data)
+                data = current
+            fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name,
+                                       suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    f.write(json.dumps(data, indent=1))
+                os.replace(tmp, path)
+            except BaseException:
+                os.unlink(tmp)
+                raise
         return True
     except OSError:
         return False  # read-only FS etc.: tuning still works, just uncached
@@ -306,14 +346,20 @@ def quarantine(path, key: str, reason: str) -> int:
     schedule resolve retunes.  Bumps and returns the entry's lifetime
     quarantine count; also drops the in-process memos — including the
     stage-timing memo, which may hold the faulted candidate's healthy-run
-    timings — so the retune actually re-measures."""
-    disk = load_cache(path)
-    entry = disk.get(key)
-    if not isinstance(entry, dict):
-        entry = {}
-    entry["bad"] = {"reason": reason}
-    entry["quarantines"] = int(entry.get("quarantines", 0)) + 1
-    save_cache(path, {key: entry})
+    timings — so the retune actually re-measures.
+
+    The whole read-bump-write runs under one :func:`_file_lock` hold (the
+    inner save passes ``lock=False``: flock is per open-file-description,
+    so re-acquiring from a second fd in the same process would deadlock) —
+    two serve replicas quarantining concurrently can't lose a count."""
+    with _file_lock(path):
+        disk = load_cache(path)
+        entry = disk.get(key)
+        if not isinstance(entry, dict):
+            entry = {}
+        entry["bad"] = {"reason": reason}
+        entry["quarantines"] = int(entry.get("quarantines", 0)) + 1
+        save_cache(path, {key: entry}, lock=False)
     for k in [k for k in _MEMO if k.endswith("|" + key)]:
         del _MEMO[k]
     _STAGE_MEMO.clear()

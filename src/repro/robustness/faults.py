@@ -35,12 +35,40 @@ Injectors:
 Injection happens at trace time, so a fault armed while an executor is
 first traced persists in that compiled artifact for its cache lifetime —
 construct fresh plans inside the ``with FaultPlan()`` block (tests do).
+
+Serve-level injectors (:mod:`repro.serve`): these fire on the *host* side
+of the serving engine's request lifecycle — not at trace time — so they
+stay deterministic across backends and hit hot (already-compiled)
+executors, which trace-time faults cannot:
+
+* :meth:`FaultPlan.slow_collective` — stalls a plan execution for
+  ``seconds`` (models a degraded interconnect wedging a collective; the
+  dispatch blocks exactly like a slow all-to-all would), exercising the
+  deadline machinery.
+* :meth:`FaultPlan.executor_crash` — raises :class:`FaultInjected` from a
+  plan execution attempt (a crashed backend executor), exercising the
+  bounded retry/backoff path.  Defaults to firing once (``times=1``) so a
+  retry can observe recovery.
+* :meth:`FaultPlan.cache_corruption` — scribbles over the shared schedule
+  DB *between* requests (mode ``"garbage"``: unparseable bytes; mode
+  ``"truncate"``: an empty file) — the mid-flight corruption another
+  crashed replica could leave behind.
+* :meth:`FaultPlan.request_burst` — tells the load harness (CLI / soak
+  test) to multiply its offered load by ``factor`` for one wave,
+  exercising admission control and load shedding.
+
+Every serve-level fault takes ``times`` (default varies per injector;
+``None`` = unlimited): the fault disarms itself after firing that many
+times, so a bounded injection provably recovers.
 """
 
 from __future__ import annotations
 
+import threading
+import time as _time
 from contextlib import contextmanager
 from dataclasses import dataclass
+from pathlib import Path
 
 import jax.numpy as jnp
 from jax import lax
@@ -54,18 +82,31 @@ class FaultInjected(RuntimeError):
 @dataclass
 class _Fault:
     kind: str                 # corrupt_wire | nan_input | saturate | compile_fail
+                              # | slow_collective | executor_crash
+                              # | cache_corruption | request_burst
     stage: int | None = None  # exchange index (execution order); None = any
     engine: str | None = None
     codec: str | None = None
     label: str | None = None  # corrupt_wire: "payload" | "scale"
     value: float = 0.0
+    times: int | None = None  # max fires before the fault disarms (None = ∞)
 
 
-#: the armed FaultPlan (module-global: tracing is effectively serial here)
+#: the armed FaultPlan (module-global: tests arm exactly one plan at a time)
 _ACTIVE: "FaultPlan | None" = None
 
-#: trace-time context the executor sets per exchange stage
-_CTX = {"stage": None, "engine": None, "codec": None}
+#: trace-time context the executor sets per exchange stage — **per thread**:
+#: the serving engine traces its fallback executor concurrently with a
+#: background retune thread re-tracing the primary schedule, and a shared
+#: dict would leak one thread's (stage, engine, codec) into the other's
+#: trace (a bf16-targeted fault would hit a complex64 fallback stage)
+_CTX_LOCAL = threading.local()
+
+
+def _ctx() -> dict:
+    if not hasattr(_CTX_LOCAL, "ctx"):
+        _CTX_LOCAL.ctx = {"stage": None, "engine": None, "codec": None}
+    return _CTX_LOCAL.ctx
 
 
 class FaultPlan:
@@ -102,6 +143,36 @@ class FaultPlan:
         self._faults.append(_Fault("compile_fail", stage, engine, codec))
         return self
 
+    # -- serve-level injectors (host-side request lifecycle) ----------------
+
+    def slow_collective(self, *, seconds=1.0, times=None):
+        """Stall matching plan executions by ``seconds`` (a wedged/slow
+        collective as the serving engine experiences it)."""
+        self._faults.append(_Fault("slow_collective", value=seconds,
+                                   times=times))
+        return self
+
+    def executor_crash(self, *, times=1):
+        """Raise :class:`FaultInjected` from ``times`` plan execution
+        attempts (a crashed executor; the retry path's test hook)."""
+        self._faults.append(_Fault("executor_crash", times=times))
+        return self
+
+    def cache_corruption(self, *, mode="garbage", times=1):
+        """Corrupt the shared schedule DB between requests: ``"garbage"``
+        writes unparseable bytes, ``"truncate"`` empties the file."""
+        if mode not in ("garbage", "truncate"):
+            raise ValueError(f"unknown cache_corruption mode {mode!r}")
+        self._faults.append(_Fault("cache_corruption", label=mode, times=times))
+        return self
+
+    def request_burst(self, *, factor=4, times=1):
+        """Tell the load harness to multiply its offered load by ``factor``
+        for ``times`` waves (admission-control / load-shedding pressure)."""
+        self._faults.append(_Fault("request_burst", value=float(factor),
+                                   times=times))
+        return self
+
     @staticmethod
     def poison_cache(path, plan, schedule, *, nfields: int = 1) -> str:
         """Write a structurally valid tuner-cache entry for ``plan``'s key
@@ -136,26 +207,30 @@ def stage_context(stage, engine, codec):
     if _ACTIVE is None:
         yield
         return
-    prev = dict(_CTX)
-    _CTX.update(stage=stage, engine=engine, codec=codec)
+    ctx = _ctx()
+    prev = dict(ctx)
+    ctx.update(stage=stage, engine=engine, codec=codec)
     try:
         yield
     finally:
-        _CTX.update(prev)
+        ctx.update(prev)
 
 
 def _matching(kind: str, label: str | None = None):
     if _ACTIVE is None:
         return []
     out = []
+    ctx = _ctx()
     for f in _ACTIVE._faults:
         if f.kind != kind:
             continue
-        if f.stage is not None and f.stage != _CTX["stage"]:
+        if f.times is not None and f.times <= 0:
+            continue  # bounded fault already used up its fires
+        if f.stage is not None and f.stage != ctx["stage"]:
             continue
-        if f.engine is not None and f.engine != _CTX["engine"]:
+        if f.engine is not None and f.engine != ctx["engine"]:
             continue
-        if f.codec is not None and f.codec != _CTX["codec"]:
+        if f.codec is not None and f.codec != ctx["codec"]:
             continue
         if label is not None and f.label is not None and f.label != label:
             continue
@@ -164,7 +239,9 @@ def _matching(kind: str, label: str | None = None):
 
 
 def _fire(f: _Fault, **note):
-    _ACTIVE.fired.append({"kind": f.kind, **{k: _CTX[k] for k in _CTX}, **note})
+    if f.times is not None:
+        f.times -= 1
+    _ACTIVE.fired.append({"kind": f.kind, **dict(_ctx()), **note})
 
 
 # -- taps (each is a no-op tracing zero eqns when nothing matches) ----------
@@ -177,7 +254,7 @@ def check_compile(engine: str, codec: str):
         _fire(f)
         raise FaultInjected(
             f"injected schedule-compile failure (engine={engine!r}, "
-            f"codec={codec!r}, stage={_CTX['stage']})")
+            f"codec={codec!r}, stage={_ctx()['stage']})")
 
 
 def tap_stage_input(block):
@@ -227,3 +304,45 @@ def _burst(x):
     else:
         u = u.at[0].set(u[0] | mask)  # stuck-at-ones exponent burst -> Inf/NaN
     return lax.bitcast_convert_type(u.reshape(x.shape), x.dtype)
+
+
+# -- serve-level taps (host side; free no-ops when nothing matches) ---------
+
+
+def tap_serve_execute():
+    """Serving-engine hook, called at the top of every plan execution
+    attempt: an armed ``slow_collective`` stalls the dispatch, then an
+    armed ``executor_crash`` raises :class:`FaultInjected`.  The crash is
+    raised *after* any stall so a slow-then-dead executor is modelable by
+    arming both."""
+    for f in _matching("slow_collective"):
+        _fire(f, seconds=f.value)
+        _time.sleep(f.value)
+    for f in _matching("executor_crash"):
+        _fire(f)
+        raise FaultInjected("injected executor crash")
+
+
+def tap_serve_cache(path):
+    """Serving-engine hook, called between request waves: an armed
+    ``cache_corruption`` fault scribbles over the shared schedule DB at
+    ``path`` (the torn write a crashed replica could leave).  Returns True
+    when a corruption fired."""
+    fired = False
+    for f in _matching("cache_corruption"):
+        _fire(f, mode=f.label, path=str(path))
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("" if f.label == "truncate" else '{"schema": 6, "trunca')
+        fired = True
+    return fired
+
+
+def serve_burst() -> int:
+    """Load-harness hook: the offered-load multiplier armed
+    ``request_burst`` faults impose this wave (1 when none match)."""
+    factor = 1.0
+    for f in _matching("request_burst"):
+        _fire(f, factor=f.value)
+        factor *= f.value
+    return max(1, int(factor))

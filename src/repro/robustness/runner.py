@@ -115,14 +115,26 @@ def _quarantine_and_retune(plan, nfields: int, err) -> int:
     return n
 
 
-def run_guarded(plan, xpad, direction: str, nfields: int = 1):
+def run_guarded(plan, xpad, direction: str, nfields: int = 1, *,
+                schedule=None):
     """Execute ``plan`` on the padded block ``xpad`` under its guard mode;
     returns ``(ypad, HealthReport)``.  See the module docstring for the
-    strict/degrade semantics."""
+    strict/degrade semantics.
+
+    ``schedule`` forces the starting schedule instead of resolving the
+    plan's own — the serving engine's circuit breaker routes requests
+    through here with a pre-degraded (bottom-ladder) schedule while the
+    quarantined entry retunes off the hot path.  A forced schedule that
+    fails walks the degradation ladder from where it stands; it never
+    quarantines the tuner cache (it is not the cache's schedule)."""
     from repro.core import tuner
 
     strict = plan.guard == "strict"
-    schedule = None
+    forced = schedule is not None
+    if forced:
+        from repro.core.planconfig import as_schedule
+
+        schedule = as_schedule(schedule)
     transitions: list[dict] = []
     report = None
     for attempt in range(1, MAX_ATTEMPTS + 1):

@@ -1,0 +1,30 @@
+"""Resilient spectral serving engine (``python -m repro.serve``).
+
+A long-running service over the distributed-FFT core: hot compiled plans in
+a warm-started LRU registry, same-shape request coalescing into batched
+multi-field executions, and a full per-request resilience lifecycle —
+deadlines, bounded retry with deterministic-jitter backoff, admission
+control with load shedding, and per-plan circuit breakers wired into the
+guarded-execution degradation ladder and the shared tuner DB.
+
+Layers: :mod:`~repro.serve.lifecycle` (outcomes, self-resolving futures,
+backoff), :mod:`~repro.serve.registry` (plan LRU + breakers),
+:mod:`~repro.serve.engine` (the :class:`SpectralServer` dispatch loop).
+Chaos hooks live in :mod:`repro.robustness.faults` (``slow_collective``,
+``executor_crash``, ``cache_corruption``, ``request_burst``).
+
+Not the LM demo — that moved to :mod:`repro.launch.serve_lm`.
+"""
+
+from repro.serve.engine import ServeConfig, SpectralServer
+from repro.serve.lifecycle import (
+    OUTCOME_STATUSES, TRIP_CIRCUIT, TRIP_SHED, TRIP_TIMEOUT,
+    Outcome, RequestFuture, backoff_s,
+)
+from repro.serve.registry import CircuitBreaker, PlanRegistry, fallback_schedule
+
+__all__ = [
+    "SpectralServer", "ServeConfig", "PlanRegistry", "CircuitBreaker",
+    "fallback_schedule", "Outcome", "RequestFuture", "backoff_s",
+    "OUTCOME_STATUSES", "TRIP_TIMEOUT", "TRIP_SHED", "TRIP_CIRCUIT",
+]

@@ -86,3 +86,49 @@ assert out["w"].sharding.mesh.shape["data"] == 4
 np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(x))
 print("ELASTIC OK")
 """, ndev=8)
+
+
+def test_async_save_failure_surfaces_on_wait(tmp_path, monkeypatch):
+    """A save_async worker-thread exception must not pass silently: the
+    next wait() raises AsyncCheckpointError carrying the failing step and
+    chaining the original exception."""
+    import repro.checkpoint.store as store
+    from repro.checkpoint.store import AsyncCheckpointError
+
+    mgr = CheckpointManager(tmp_path)
+
+    def boom(*a, **k):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(store, "save_checkpoint", boom)
+    mgr.save_async(7, _tree())
+    with pytest.raises(AsyncCheckpointError) as ei:
+        mgr.wait()
+    assert ei.value.step == 7
+    assert isinstance(ei.value.__cause__, OSError)
+    mgr.wait()  # surfaced exactly once; manager is reusable afterwards
+
+
+def test_async_save_failure_surfaces_on_next_save(tmp_path, monkeypatch):
+    """save_async itself must surface the previous write's failure before
+    admitting a new one (a training loop that never calls wait() between
+    saves still cannot lose a failed checkpoint silently)."""
+    import repro.checkpoint.store as store
+    from repro.checkpoint.store import AsyncCheckpointError
+
+    mgr = CheckpointManager(tmp_path)
+    real = store.save_checkpoint
+
+    def boom(*a, **k):
+        raise RuntimeError("transient writer death")
+
+    monkeypatch.setattr(store, "save_checkpoint", boom)
+    mgr.save_async(1, _tree())
+    monkeypatch.setattr(store, "save_checkpoint", real)
+    with pytest.raises(AsyncCheckpointError) as ei:
+        mgr.save_async(2, _tree())
+    assert ei.value.step == 1
+    # the failure was surfaced (and cleared): the retry goes through
+    mgr.save_async(2, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 2

@@ -6,6 +6,8 @@ marks."""
 import json
 import threading
 
+import pytest
+
 from repro.core import tuner
 
 
@@ -260,9 +262,14 @@ def test_save_cache_atomic(tmp_path):
         t.join()
     assert not errs
     json.loads(path.read_text())  # final state is one writer's full payload
-    # no temp files left behind
-    leftovers = [p for p in path.parent.iterdir() if p.name != path.name]
+    # no temp files left behind (the advisory .lock file is expected)
+    leftovers = [p for p in path.parent.iterdir()
+                 if p.name not in (path.name, path.name + ".lock")]
     assert leftovers == []
+    # merge semantics: every writer's key survived (the in-process flock
+    # serialized the read-merge-write cycles)
+    final = json.loads(path.read_text())
+    assert {f"key{i}" for i in range(8)} <= set(final)
 
 
 def test_v5_entry_migrates_without_retune(subproc, tmp_path):
@@ -378,3 +385,56 @@ print("COMMITTED V5 FIXTURE OK")
 """
     out = subproc(code, ndev=4)
     assert "COMMITTED V5 FIXTURE OK" in out
+
+
+def test_quarantine_locks_without_self_deadlock(tmp_path):
+    """quarantine holds the cross-process file lock across its whole
+    read-bump-write and must not re-acquire it from a second fd inside
+    save_cache (flock is per open-file-description: that would deadlock).
+    Regression: this call simply has to return."""
+    path = tmp_path / "cache.json"
+    tuner.save_cache(path, {"k": {"schedule": [["fused", 1, "complex64"]],
+                                  "timings": {}}})
+    assert tuner.quarantine(path, "k", "boom") == 1
+    assert tuner.quarantine(path, "k", "boom again") == 2
+    entry = json.loads(path.read_text())["k"]
+    assert entry["bad"]["reason"] == "boom again"
+    assert entry["quarantines"] == 2
+
+
+def test_save_cache_cross_process_lock(tmp_path):
+    """Concurrent *processes* merging disjoint keys into one cache must not
+    lose updates: the fcntl.flock around the read-merge-write cycle closes
+    the interleave where two writers read the same snapshot and the later
+    os.replace drops the earlier writer's keys."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    fcntl = pytest.importorskip("fcntl")
+    assert fcntl  # the lock is a no-op without it; nothing to test then
+    path = tmp_path / "shared.json"
+    nproc, nkeys = 4, 12
+    code = """
+import sys
+from repro.core import tuner
+path, wid = sys.argv[1], int(sys.argv[2])
+for j in range({nkeys}):
+    assert tuner.save_cache(path, {{"w%d-k%d" % (wid, j): {{"v": wid}}}})
+print("WRITER-DONE")
+""".format(nkeys=nkeys)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    procs = [subprocess.Popen([sys.executable, "-c", code, str(path), str(i)],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE, text=True)
+             for i in range(nproc)]
+    for p in procs:
+        out, err = p.communicate(timeout=300)
+        assert p.returncode == 0, err[-2000:]
+        assert "WRITER-DONE" in out
+    final = json.loads(path.read_text())
+    expect = {f"w{i}-k{j}" for i in range(nproc) for j in range(nkeys)}
+    missing = expect - set(final)
+    assert not missing, f"lost {len(missing)} updates: {sorted(missing)[:5]}"
