@@ -1,0 +1,191 @@
+"""Diff two BENCH records on matched method keys — the CI regression gate.
+
+Reads any committed BENCH schema (bench-v1 single record, bench-v2
+record container, bench-v3 scaling series — see
+:mod:`benchmarks.normalize_bench`) plus raw ``fftbench --compare`` blobs,
+flattens each into ``key -> {best_s, spread_frac, device_kind, backend}``
+rows keyed on the workload identity (grid, shape, device count, fields,
+``method@dtype@impl``), and compares the intersection:
+
+* a key **regresses** when the new time exceeds the old by more than the
+  noise-aware threshold ``rtol + spread_slack * max(spread_old,
+  spread_new)`` — the measured run-to-run spread (median/best - 1 over
+  the outer repetitions, stamped on every point since bench-v3) widens
+  the gate instead of a flaky hair-trigger;
+* keys faster than ``--min-time`` are skipped (a sub-0.5 ms CPU point is
+  scheduler noise, not signal);
+* records from different ``device_kind``/``backend`` are different
+  experiments: the diff is reported but **advisory** (exit 0) unless
+  ``--force``.
+
+Exit status: 1 if any enforced regression, else 0.  ``--out`` writes the
+full machine-readable report (CI uploads it as an artifact).
+
+Usage:
+    python benchmarks/benchdiff.py benchmarks/BENCH_pr10.json /tmp/BENCH_new.json
+    python benchmarks/benchdiff.py old.json new.json --rtol 0.25 --out diff.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _row(best_s, *, spread=None, device_kind=None, backend=None):
+    return {"best_s": best_s, "spread_frac": spread,
+            "device_kind": device_kind, "backend": backend}
+
+
+def _flatten_v1(rec: dict) -> dict:
+    """One bench-v1 record (also the shape of each bench-v2 member and of
+    a raw fftbench --compare blob after minor key differences)."""
+    shape = "x".join(map(str, rec.get("shape", ())))
+    base = (f"{rec.get('grid')}@{shape}@nd{rec.get('ndev')}"
+            f"@f{rec.get('fields', 1)}")
+    kind, backend = rec.get("device_kind"), rec.get("backend")
+    out = {}
+    for tag, row in (rec.get("methods") or {}).items():
+        best = row.get("best_s")
+        if best is None:
+            continue
+        p50 = row.get("p50_s")
+        spread = (p50 / best - 1.0) if p50 and best > 0 else None
+        out[f"{base}::{tag}"] = _row(best, spread=spread,
+                                     device_kind=kind, backend=backend)
+    ex = rec.get("exchange")
+    if ex:
+        for k in ("stacked_s", "per_field_s"):
+            if ex.get(k):
+                out[f"{base}::exchange.{k[:-2]}"] = _row(
+                    ex[k], device_kind=kind, backend=backend)
+    return out
+
+
+def _flatten_v3(rec: dict) -> dict:
+    kind, backend = rec.get("device_kind"), rec.get("backend")
+    out = {}
+    for name, series in (rec.get("series") or {}).items():
+        groups = [(name, series.get("points") or [])]
+        redist = series.get("redist") or {}
+        groups.append((name + "#redist", redist.get("points") or []))
+        for prefix, pts in groups:
+            for p in pts:
+                out[f"{prefix}#nd{p['ndev']}"] = _row(
+                    p["best_s"], spread=p.get("spread_frac"),
+                    device_kind=kind, backend=backend)
+    return out
+
+
+def flatten_record(rec: dict) -> dict:
+    """``key -> row`` for any BENCH schema (v1/v2/v3 or raw --compare)."""
+    schema = rec.get("schema")
+    if schema == "bench-v3":
+        return _flatten_v3(rec)
+    if schema == "bench-v2" or (schema is None and "records" in rec):
+        out = {}
+        for sub in rec.get("records", []):
+            out.update(flatten_record(sub))
+        return out
+    # bench-v1 and raw fftbench --compare blobs share the flat layout
+    return _flatten_v1(rec)
+
+
+def load_record(path: str | Path) -> dict:
+    text = Path(path).read_text().strip()
+    try:
+        return json.loads(text)
+    except ValueError:
+        return json.loads(text.splitlines()[-1])
+
+
+def diff_records(old: dict, new: dict, *, rtol: float = 0.25,
+                 min_time: float = 5e-4, spread_slack: float = 1.0) -> dict:
+    """Compare flattened old/new rows; see module docstring for the rules."""
+    rows_old, rows_new = flatten_record(old), flatten_record(new)
+    matched = sorted(set(rows_old) & set(rows_new))
+    report = {
+        "rtol": rtol, "min_time": min_time, "spread_slack": spread_slack,
+        "n_old": len(rows_old), "n_new": len(rows_new),
+        "matched": len(matched), "advisory": False,
+        "regressions": [], "improvements": [], "skipped": [], "compared": [],
+    }
+    for key in matched:
+        o, n = rows_old[key], rows_new[key]
+        if (o["device_kind"] and n["device_kind"]
+                and (o["device_kind"], o["backend"])
+                != (n["device_kind"], n["backend"])):
+            report["advisory"] = True
+        if o["best_s"] < min_time:
+            report["skipped"].append({"key": key, "old_s": o["best_s"],
+                                      "why": f"old < min_time {min_time}"})
+            continue
+        ratio = n["best_s"] / o["best_s"] - 1.0
+        noise = max(o.get("spread_frac") or 0.0, n.get("spread_frac") or 0.0)
+        threshold = rtol + spread_slack * noise
+        entry = {"key": key, "old_s": o["best_s"], "new_s": n["best_s"],
+                 "delta_frac": ratio, "threshold": threshold}
+        report["compared"].append(entry)
+        if ratio > threshold:
+            report["regressions"].append(entry)
+        elif ratio < -threshold:
+            report["improvements"].append(entry)
+    if report["advisory"]:
+        report["advisory_reason"] = ("device_kind/backend differ between "
+                                     "records: different experiments, diff "
+                                     "is informational")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH records; exit 1 on regression")
+    ap.add_argument("old", help="baseline BENCH record (committed)")
+    ap.add_argument("new", help="candidate BENCH record (fresh run)")
+    ap.add_argument("--rtol", type=float, default=0.25,
+                    help="base slowdown threshold (default 0.25 = 25%%)")
+    ap.add_argument("--min-time", type=float, default=5e-4,
+                    help="ignore keys whose baseline is faster than this")
+    ap.add_argument("--spread-slack", type=float, default=1.0,
+                    help="how much measured run-to-run spread widens the "
+                         "threshold")
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--force", action="store_true",
+                    help="enforce even across device_kind/backend mismatches")
+    args = ap.parse_args(argv)
+
+    report = diff_records(load_record(args.old), load_record(args.new),
+                          rtol=args.rtol, min_time=args.min_time,
+                          spread_slack=args.spread_slack)
+    if args.out:
+        Path(args.out).write_text(json.dumps(report, indent=1) + "\n")
+
+    print(f"benchdiff: {report['matched']} matched key(s), "
+          f"{len(report['skipped'])} below min-time, "
+          f"{len(report['regressions'])} regression(s), "
+          f"{len(report['improvements'])} improvement(s)")
+    for entry in report["regressions"]:
+        print(f"  REGRESSION {entry['key']}: {entry['old_s']:.5f}s -> "
+              f"{entry['new_s']:.5f}s (+{entry['delta_frac']:.1%}, "
+              f"threshold {entry['threshold']:.1%})")
+    for entry in report["improvements"]:
+        print(f"  improved   {entry['key']}: {entry['old_s']:.5f}s -> "
+              f"{entry['new_s']:.5f}s ({entry['delta_frac']:.1%})")
+    if report["matched"] == 0:
+        print("benchdiff: WARNING no matched keys (different sweeps or "
+              "schemas?) — nothing to gate")
+        return 0
+    if report["advisory"] and not args.force:
+        print(f"benchdiff: advisory only — {report['advisory_reason']}")
+        return 0
+    if report["regressions"]:
+        print("benchdiff: FAIL")
+        return 1
+    print("benchdiff: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -133,16 +133,24 @@ METHODS = ("fused", "traditional", "pipelined", "auto")
 
 def _best_of(once, xg, *, outer, inner):
     """Fastest outer iteration of ``inner`` consecutive applications."""
+    return _timed(once, xg, outer=outer, inner=inner)[0]
+
+
+def _timed(once, xg, *, outer, inner):
+    """(fastest, median) outer iteration of ``inner`` consecutive
+    applications — the median rides along so downstream consumers
+    (benchdiff's noise-aware regression gate) can tell run-to-run spread
+    from a real slowdown."""
     once(xg).block_until_ready()  # compile + warm
-    best = float("inf")
+    times = []
     for _ in range(outer):
         t0 = time.perf_counter()
         v = xg
         for _ in range(inner):
             v = once(v)
         v.block_until_ready()
-        best = min(best, (time.perf_counter() - t0) / inner)
-    return best
+        times.append((time.perf_counter() - t0) / inner)
+    return min(times), float(np.median(times))
 
 
 def _make_input(plan, shape, nfields=1):
@@ -159,7 +167,8 @@ def _make_input(plan, shape, nfields=1):
 
 def _time_plan(plan, shape, args):
     """Time one forward+backward round trip of ``plan`` (total measure),
-    batched over ``--fields`` stacked fields when N > 1."""
+    batched over ``--fields`` stacked fields when N > 1; returns
+    ``(best_s, p50_s)``."""
     nf = args.fields
     x = _make_input(plan, shape, nf)
     from repro.core.pencil import pad_global
@@ -173,7 +182,7 @@ def _time_plan(plan, shape, args):
         xg = jax.device_put(pad_global(jnp.asarray(x), plan.input_pencil),
                             plan.input_pencil.sharding)
         fwd, bwd = jax.jit(plan.forward_padded), jax.jit(plan.backward_padded)
-    return _best_of(lambda v: bwd(fwd(v)), xg, outer=args.outer, inner=args.inner)
+    return _timed(lambda v: bwd(fwd(v)), xg, outer=args.outer, inner=args.inner)
 
 
 def _time_guard_pair(plan, shape, args):
@@ -223,6 +232,48 @@ def _time_guard_pair(plan, shape, args):
             v.block_until_ready()
             best[k] = min(best[k], (time.perf_counter() - t0) / args.inner)
     return best["u"], best["g"]
+
+
+#: "infinite" bandwidth for isolating the model's comm-free residual
+_NO_COMM_BW = 1e30
+
+
+def _model_features(plan, measure: str, nfields: int) -> dict:
+    """Analytic-model terms for the measured quantity, in the linear
+    surrogate form :mod:`repro.core.modelfit` fits — ``time_s`` at the
+    reference coefficients, the comm-free ``compute_s`` residual
+    (bandwidth → ∞, latency → 0: FFT flops + codec/copy HBM passes), the
+    wire bytes, and the latency-priced collective launch count.  A
+    ``total`` measure is a forward+backward round trip, so every term sums
+    both directions; ``redistribution`` prices the exchanges-only
+    executor."""
+    from repro.core.modelfit import REFERENCE_COEFFS
+
+    if measure == "redistribution":
+        kw = {"itemsize": None, "nfields": nfields, "exchange_only": True}
+        time_s = plan.model_time_s(**kw)
+        compute_s = plan.model_time_s(ici_bw=_NO_COMM_BW, ici_latency_s=0.0, **kw)
+        wire = plan.comm_bytes_per_device(None, nfields=nfields)
+        launches = plan.model_collective_launches(nfields=nfields)
+    else:
+        kw = {"itemsize": None, "nfields": nfields}
+        time_s = compute_s = 0.0
+        launches = 0
+        for direction in ("forward", "backward"):
+            time_s += plan.model_time_s(direction=direction, **kw)
+            compute_s += plan.model_time_s(direction=direction, ici_bw=_NO_COMM_BW,
+                                           ici_latency_s=0.0, **kw)
+            launches += plan.model_collective_launches(nfields=nfields,
+                                                       direction=direction)
+        # backward walks the same exchanges reversed: same wire volume
+        wire = 2 * plan.comm_bytes_per_device(None, nfields=nfields)
+    return {
+        "time_s": time_s,
+        "compute_s": compute_s,
+        "wire_bytes_per_dev": wire,
+        "launches": launches,
+        "coeffs": dict(REFERENCE_COEFFS),
+    }
 
 
 def _rand_block(shape, dtype):
@@ -340,11 +391,13 @@ def main(argv=None):
                        if args.fields > 1 else f"{method}@{comm_dtype}")
                 if ximpl != "jnp":
                     tag += f"@{ximpl}"
+                best_s, p50_s = _time_plan(plan, shape, args)
                 out["methods"][tag] = {
                     "comm_dtype": comm_dtype,
                     "exchange_impl": ximpl,
                     "batch_fusion": fusion if args.fields > 1 else None,
-                    "best_s": _time_plan(plan, shape, args),
+                    "best_s": best_s,
+                    "p50_s": p50_s,
                     "schedule": [list(s) for s in sched],
                     # itemsize=None prices each exchange at its traced
                     # dtype width (complex64 after the r2c stage, f32 for
@@ -390,9 +443,9 @@ def main(argv=None):
         def once(v):
             return fn(v)
 
-        best = _best_of(once, xg, outer=args.outer, inner=args.inner)
+        best, p50 = _timed(once, xg, outer=args.outer, inner=args.inner)
     else:
-        best = _time_plan(plan, shape, args)
+        best, p50 = _time_plan(plan, shape, args)
     guard_section = None
     if args.guard != "off" and args.measure == "total":
         unguarded_s, guarded_s = _time_guard_pair(plan, shape, args)
@@ -414,9 +467,12 @@ def main(argv=None):
         "backend": jax.default_backend(),
         "transforms": [sp.tag() for sp in plan.transforms],
         "best_s": best,
+        "p50_s": p50,
+        "spread_frac": p50 / best - 1.0 if best > 0 else 0.0,
         "guard": guard_section,
         "comm_bytes_per_dev": plan.comm_bytes_per_device(None, nfields=nf),
         "model_flops": plan.model_flops(nfields=nf),
+        "model": _model_features(plan, args.measure, nf),
     }))
 
 

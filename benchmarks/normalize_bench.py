@@ -23,9 +23,31 @@ path vs the per-field loop.)  Several raw files normalize into one
 ``{"schema": "bench-v2", "records": [...]}`` container so one BENCH file
 can carry multiple grid shapes.
 
+**bench-v3** (scaling sweeps): a raw ``benchmarks.scalebench`` blob
+(marker key ``"scalebench"``) normalizes through
+:func:`normalize_scaling` into
+
+    {"schema": "bench-v3", "pr": N, "device_kind": ..., "backend": ...,
+     "git_sha": ..., "priors": {fitted ici_bw/ici_latency_s/...},
+     "n_misses": N,
+     "series": {"strong@slab@16x16x16@fused@complex64@jnp": {
+        "mode": "strong", "grid": "slab", "method": "fused", ...,
+        "points": [{"shape", "ndev", "best_s", "p50_s", "spread_frac",
+                    "model_time_s", "fit_time_s", "residual",
+                    "wire_bytes_per_dev", "launches"}, ...],
+        "fit": {"ici_bw", "ici_latency_s", "rmse_log", "misses": [...]},
+        "redist": {"points": [...], "fit": {...}}  # when split was swept
+     }, ...}}
+
+— every point carries its measured time, the analytic ``model_time_s``,
+and the residual vs the per-series least-squares fit
+(:mod:`repro.core.modelfit`).  v1/v2 raw blobs keep normalizing exactly
+as before, and ``benchmarks/benchdiff.py`` reads all three schemas.
+
 Usage:
     python benchmarks/normalize_bench.py fftbench.json --pr 3 --out BENCH_pr3.json
     python benchmarks/normalize_bench.py slab.json pencil.json --pr 4 --out BENCH_pr4.json
+    python benchmarks/normalize_bench.py scalebench_raw.json --pr 10 --out BENCH_pr10.json
 """
 
 from __future__ import annotations
@@ -108,18 +130,108 @@ def normalize(raw: dict, pr: int | None = None) -> dict:
     return out
 
 
+def _series_point(raw_point: dict, fitted: dict | None) -> dict:
+    """One bench-v3 series point: measured time + model terms + the fit
+    residual :func:`repro.core.modelfit.fit_series` computed for it."""
+    model = raw_point.get("model") or {}
+    out = {
+        "shape": list(raw_point["shape"]),
+        "ndev": raw_point["ndev"],
+        "best_s": raw_point["best_s"],
+        "p50_s": raw_point.get("p50_s"),
+        "spread_frac": raw_point.get("spread_frac"),
+        "model_time_s": model.get("time_s"),
+        "compute_s": model.get("compute_s"),
+        "wire_bytes_per_dev": model.get("wire_bytes_per_dev"),
+        "launches": model.get("launches"),
+    }
+    if fitted is not None:
+        out["fit_time_s"] = fitted["fit_time_s"]
+        out["residual"] = fitted["residual"]
+    return out
+
+
+def normalize_scaling(raw: dict, pr: int | None = None) -> dict:
+    """Normalize a raw ``benchmarks.scalebench`` sweep into one bench-v3
+    record with per-series least-squares model fits and per-point
+    residuals.  The returned dict additionally carries the full fit report
+    under ``"_fit_report"`` (callers persist it separately and drop the
+    key before committing the BENCH record)."""
+    from repro.core import modelfit
+
+    first = raw["series"][0]["points"][0]
+    series_out = {}
+    fit_inputs = {}
+    for s in raw["series"]:
+        name = s["name"]
+        entry = {k: s.get(k) for k in ("mode", "grid", "method", "fields",
+                                       "base_shape")}
+        entry["comm_dtype"] = s.get("comm_dtype") or "complex64"
+        entry["exchange_impl"] = s.get("exchange_impl") or "jnp"
+        for key, pts_key in (("points", "points"),
+                             ("redist", "redist_points")):
+            pts = s.get(pts_key)
+            if not pts:
+                continue
+            fit = modelfit.fit_series(pts)
+            fitted_rows = fit.pop("points")
+            rows = [_series_point(p, f) for p, f in zip(pts, fitted_rows)]
+            if key == "points":
+                entry["points"] = rows
+                entry["fit"] = fit
+                fit_inputs[name] = pts
+            else:
+                entry["redist"] = {"points": rows, "fit": fit}
+                fit_inputs[name + "#redist"] = pts
+        series_out[name] = entry
+    report = modelfit.fit_report(fit_inputs,
+                                 device_kind=first.get("device_kind"),
+                                 backend=first.get("backend"))
+    out = {
+        "schema": "bench-v3",
+        "preset": raw.get("preset"),
+        "device_kind": first.get("device_kind"),
+        "backend": first.get("backend"),
+        "git_sha": git_sha(),
+        "series": series_out,
+        "priors": report["priors"],
+        "n_misses": report["n_misses"],
+        "_fit_report": report,
+    }
+    if pr is not None:
+        out["pr"] = pr
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("raw", nargs="+",
-                    help="fftbench --compare JSON output file(s)")
+                    help="fftbench --compare JSON output file(s), or one "
+                         "scalebench raw sweep")
     ap.add_argument("--pr", type=int, default=None, help="PR number tag")
     ap.add_argument("--out", default=None, help="output path (default: stdout)")
+    ap.add_argument("--fit-report", default=None,
+                    help="for a scalebench sweep: also write the full "
+                         "model-fit residual report here")
     args = ap.parse_args(argv)
     records = []
     for path in args.raw:
-        # the compare table is the last JSON line (fftbench may log above it)
-        last = Path(path).read_text().strip().splitlines()[-1]
-        records.append(normalize(json.loads(last), pr=args.pr))
+        text = Path(path).read_text().strip()
+        try:  # a pretty-printed scalebench sweep is one JSON document
+            blob = json.loads(text)
+        except ValueError:
+            # fftbench prints its table as the last JSON line (it may log
+            # free-form text above it)
+            blob = json.loads(text.splitlines()[-1])
+        if blob.get("scalebench"):
+            rec = normalize_scaling(blob, pr=args.pr)
+            report = rec.pop("_fit_report")
+            if args.fit_report:
+                Path(args.fit_report).write_text(
+                    json.dumps(report, indent=1, sort_keys=True) + "\n")
+            records.append(rec)
+        else:
+            records.append(normalize(blob, pr=args.pr))
     if len(records) == 1:
         rec = records[0]
     else:

@@ -650,10 +650,12 @@ class ParallelFFT:
         peak_flops: float = 197e12,
         ici_bw: float = 50e9,
         hbm_bw: float = 819e9,
+        ici_latency_s: float | None = None,
         schedule: Schedule | None = None,
         direction: str = "forward",
         nfields: int = 1,
         batch_fusion: str | None = None,
+        exchange_only: bool = False,
     ) -> float:
         """Overlap-aware modeled wall time of one transform: FFT stages at
         ``peak_flops``; each exchange via
@@ -667,8 +669,18 @@ class ParallelFFT:
         fusion mode comes from the (possibly 4-field) ``schedule`` entries,
         or uniformly from ``batch_fusion`` when given — stacked exchanges
         pay one collective latency for all fields, pipelined-across-fields
-        hides per-field collectives under the previous field's FFT."""
-        from repro.core.redistribute import exchange_time_model
+        hides per-field collectives under the previous field's FFT.
+
+        The hardware coefficients (``peak_flops`` / ``ici_bw`` / ``hbm_bw``
+        / ``ici_latency_s``) are free parameters so the scaling harness
+        (:mod:`repro.core.modelfit`) can least-squares fit them against
+        measured sweeps; ``exchange_only=True`` prices the exchanges-only
+        executor fftbench times under ``--measure redistribution`` (FFT
+        stages contribute nothing and no overlap credit applies)."""
+        from repro.core.redistribute import ICI_LATENCY_S, exchange_time_model
+
+        if ici_latency_s is None:
+            ici_latency_s = ICI_LATENCY_S
 
         if schedule is None:
             schedule = self.batched_schedule(nfields) if nfields > 1 else self.schedule
@@ -696,18 +708,50 @@ class ParallelFFT:
                 nxt = stages[i + 1] if i + 1 < len(stages) else None
                 fft_s = 0.0
                 if isinstance(nxt, FFTStage) and nxt.axis == st.w:
-                    fft_s = self._stage_flops_at(i + 1, stages, pencils, dtypes) / ndev / peak_flops
+                    if not exchange_only:
+                        fft_s = (self._stage_flops_at(i + 1, stages, pencils, dtypes)
+                                 / ndev / peak_flops)
                     i += 1  # folded into the exchange term
                 total += exchange_time_model(
                     src_pen, st.v, st.w, itemsize=isz, method=method,
                     chunks=chunks, comm_dtype=comm_dtype, impl=ex_impl,
-                    ici_bw=ici_bw, hbm_bw=hbm_bw, overlap_compute_s=fft_s,
+                    ici_bw=ici_bw, hbm_bw=hbm_bw, ici_latency_s=ici_latency_s,
+                    overlap_compute_s=fft_s,
                     nfields=nfields, batch_fusion=fusion)
-            else:
+            elif not exchange_only:
                 total += nfields * self._stage_flops_at(i, stages, pencils, dtypes) / ndev / peak_flops
             i += 1
         return total
 
+    def model_collective_launches(
+        self, *, nfields: int = 1, schedule: Schedule | None = None,
+        batch_fusion: str | None = None, direction: str = "forward",
+    ) -> int:
+        """Total latency-priced collective launches one transform issues
+        under its (resolved) schedule — the exact multiplier
+        :meth:`model_time_s` applies to ``ici_latency_s``, exposed so the
+        scaling harness can fit the latency coefficient from measured
+        sweeps (see :func:`repro.core.redistribute
+        .exchange_collective_launches` for the per-exchange accounting)."""
+        from repro.core.redistribute import exchange_collective_launches
+
+        if schedule is None:
+            schedule = self.batched_schedule(nfields) if nfields > 1 else self.schedule
+        if direction == "backward":
+            schedule = schedule[::-1]
+        elif direction != "forward":
+            raise ValueError(f"unknown direction {direction!r}")
+        total, ex_i = 0, 0
+        for i, st in enumerate(self.stages):
+            if not isinstance(st, ExchangeStage):
+                continue
+            entry = StageEntry.make(schedule[ex_i])
+            ex_i += 1
+            fusion = batch_fusion if batch_fusion is not None else entry.batch_fusion
+            total += exchange_collective_launches(
+                self.pencil_trace[i], st.v, st.w, method=entry.method,
+                chunks=entry.chunks, nfields=nfields, batch_fusion=fusion)
+        return total
 
     def audit(self, *, nfields: int = 1, direction: str = "forward",
               schedule=None):

@@ -566,6 +566,29 @@ def exchange_local_copy_elems(
 ICI_LATENCY_S = 1e-6
 
 
+def exchange_collective_launches(
+    src: Pencil, v: int, w: int, *, method: Method = "fused",
+    chunks: int = 1, nfields: int = 1, batch_fusion: str = "stacked",
+) -> int:  # noqa: ARG001 — (src, v, w) parity with the exchange_* family
+    """Number of latency-priced collective launches this exchange issues —
+    exactly the multiplier :func:`exchange_time_model` applies to
+    ``ici_latency_s``, stated as a count so the scaling harness can fit the
+    latency coefficient against measurements (the int8 scale all-to-all is
+    not latency-priced by the time model, so it is not counted here
+    either; planlint's launch audit covers it instead).
+
+    ``stacked`` (or a single field) issues one collective per exchange —
+    ``chunks`` of them for a chunked pipelined engine; ``per-field`` and
+    ``pipelined-across-fields`` both issue that count per field."""
+    per_exchange = chunks if method == "pipelined" and chunks > 1 else 1
+    n = max(1, nfields)
+    if n == 1 or batch_fusion == "stacked":
+        return per_exchange
+    if batch_fusion in ("per-field", "pipelined-across-fields"):
+        return n * per_exchange
+    raise ValueError(f"unknown batch_fusion {batch_fusion!r}; expected one of {BATCH_FUSIONS}")
+
+
 def exchange_time_model(
     src: Pencil,
     v: int,

@@ -85,6 +85,7 @@ except ImportError:  # pragma: no cover - non-POSIX
 import jax
 import jax.numpy as jnp
 
+from repro.core import modelfit
 from repro.core.meshutil import shard_map
 from repro.core.planconfig import BATCH_FUSIONS, StageEntry, as_schedule
 from repro.core.quant import canonical_comm_dtype
@@ -397,18 +398,61 @@ def _parse_entry(entry, n_exchanges: int, candidates=None):
     return None
 
 
+#: with model priors armed, how many top-ranked candidates per stage the
+#: tuner still micro-benchmarks (0 disables pruning: rank only)
+PRIOR_TOPK_DEFAULT = 6
+
+
+def _prior_stage_time(plan, si: int, entry: StageEntry, nfields: int,
+                      coeffs: dict) -> float:
+    """Modeled seconds for one stage candidate at the *fitted* hardware
+    coefficients of a scaling-sweep fit report (see
+    :mod:`repro.core.modelfit`) — the ranking key prior-guided tuning
+    prunes the sweep with.  Mirrors :meth:`ParallelFFT.model_time_s`'s
+    per-stage accounting: the exchange plus the 1-D FFT it feeds."""
+    from repro.core.pfft import FFTStage
+    from repro.core.redistribute import exchange_time_model
+
+    st = plan.stages[si]
+    follow = plan.stages[si + 1] if si + 1 < len(plan.stages) else None
+    fft_s = 0.0
+    if isinstance(follow, FFTStage) and follow.axis == st.w:
+        ndev = int(plan.mesh.devices.size)
+        fft_s = plan._stage_flops_at(si + 1) / ndev / coeffs["peak_flops"]
+    return exchange_time_model(
+        plan.pencil_trace[si], st.v, st.w, itemsize=plan._stage_itemsize(si),
+        method=entry.method, chunks=entry.chunks, comm_dtype=entry.comm_dtype,
+        impl=entry.impl, ici_bw=coeffs["ici_bw"], hbm_bw=coeffs["hbm_bw"],
+        ici_latency_s=coeffs["ici_latency_s"], overlap_compute_s=fft_s,
+        nfields=nfields, batch_fusion=entry.batch_fusion)
+
+
 def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2,
               nfields: int = 1):
     """Micro-benchmark every :class:`StageEntry` candidate for every
     exchange stage of ``plan`` (each stage timed together with the 1-D FFT
     it feeds, so pipelined candidates get credit for overlap; batched
     candidates run on the real stacked ``(nfields, …)`` stage shapes) and
-    return (schedule, timings) with ``timings[stage][tag] = seconds``."""
+    return (schedule, timings) with ``timings[stage][tag] = seconds``.
+
+    With model priors armed (``$REPRO_MODEL_PRIORS`` names a
+    :mod:`repro.core.modelfit` fit report), each stage's candidate set is
+    first *ranked* by modeled time at the fitted coefficients and only the
+    top ``$REPRO_TUNER_PRIOR_TOPK`` (default 6, ``0`` disables) are
+    micro-benchmarked; pruned candidates keep their model estimate in the
+    timings dict under a ``pruned:`` tag so the cache records what the
+    prior skipped."""
     from repro.core.pfft import ExchangeStage
 
     if candidates is None:
         candidates = _default_candidates(plan, nfields)
     candidates = as_schedule(candidates)
+    priors = modelfit.active_priors()
+    try:
+        topk = int(os.environ.get("REPRO_TUNER_PRIOR_TOPK",
+                                  str(PRIOR_TOPK_DEFAULT)))
+    except ValueError:
+        topk = PRIOR_TOPK_DEFAULT
     base_key = json.dumps(_key_fields(plan, nfields), sort_keys=True, default=str)
     schedule = []
     timings: dict[str, dict[str, float]] = {}
@@ -417,7 +461,15 @@ def tune_plan(plan, *, candidates=None, repeats: int = 3, inner: int = 2,
             continue
         per = {}
         by_tag = {}
-        for cand in candidates:
+        sweep = candidates
+        if priors is not None and 0 < topk < len(candidates):
+            est = {cand: _prior_stage_time(plan, si, cand, nfields, priors)
+                   for cand in candidates}
+            ranked = sorted(candidates, key=lambda c: est[c])
+            sweep, skipped = ranked[:topk], ranked[topk:]
+            for cand in skipped:
+                per[f"pruned:{_tag(cand)}"] = est[cand]
+        for cand in sweep:
             tag = _tag(cand)
             by_tag[tag] = cand
             memo_key = (base_key, si, tag)

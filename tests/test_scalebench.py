@@ -1,0 +1,375 @@
+"""Scaling-proof harness: model fitting, bench-v3, and the benchdiff gate.
+
+Covers the collector side of ``benchmarks/scalebench.py`` without
+launching sweep subprocesses (the fitter, the bench-v3 normalizer, the
+regression differ are all pure python), plus subprocess checks that the
+model hooks the fitter relies on — ``model_collective_launches`` and the
+``ici_latency_s`` term of ``model_time_s`` — agree with each other, and
+that armed model priors actually prune the tuner's candidate sweep.
+"""
+
+import json
+import math
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import modelfit
+from repro.core.redistribute import exchange_collective_launches
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))  # benchmarks/ is a top-level package
+
+from benchmarks import scalebench  # noqa: E402
+from benchmarks.benchdiff import diff_records, flatten_record  # noqa: E402
+from benchmarks.benchdiff import main as benchdiff_main  # noqa: E402
+from benchmarks.normalize_bench import normalize_scaling  # noqa: E402
+
+
+def _synthetic_points(ici_bw=40e9, lat=2e-6, *, perturb=None):
+    """A strong-scaling-shaped series whose measured times are EXACTLY the
+    linear surrogate at (ici_bw, lat).  bytes and launches deliberately not
+    proportional (pipelined chunks grow with ndev) so the fit can separate
+    the two terms."""
+    pts = []
+    for ndev, chunks in ((2, 1), (4, 2), (8, 4), (16, 8)):
+        wire = 4.2e6 / ndev
+        launches = 2 * chunks
+        compute = 3e-4 / ndev
+        t = compute + wire / ici_bw + launches * lat
+        if perturb:
+            t *= perturb.get(ndev, 1.0)
+        pts.append({"shape": [16 * ndev, 16, 16], "ndev": ndev, "best_s": t,
+                    "model": {"time_s": t, "compute_s": compute,
+                              "wire_bytes_per_dev": wire,
+                              "launches": launches}})
+    return pts
+
+
+# -- modelfit ---------------------------------------------------------------
+
+
+def test_fit_recovers_known_coefficients():
+    fit = modelfit.fit_series(_synthetic_points(ici_bw=40e9, lat=2e-6))
+    assert fit["ici_bw"] == pytest.approx(40e9, rel=1e-6)
+    assert fit["ici_latency_s"] == pytest.approx(2e-6, rel=1e-6)
+    assert not fit["misses"]
+    assert fit["rmse_log"] == pytest.approx(0.0, abs=1e-9)
+    for p in fit["points"]:
+        assert p["residual"] == pytest.approx(1.0, rel=1e-9)
+
+
+def test_fit_collinear_series_attributes_bandwidth_only():
+    # launches exactly proportional to bytes: the two columns cannot be
+    # separated, so the fit must attribute everything to bandwidth instead
+    # of splitting by the minimum-norm accident
+    pts = _synthetic_points()
+    for p in pts:
+        p["model"]["launches"] = p["model"]["wire_bytes_per_dev"] / 1e6
+        p["best_s"] = (p["model"]["compute_s"]
+                       + p["model"]["wire_bytes_per_dev"] / 40e9)
+    fit = modelfit.fit_series(pts)
+    assert math.isfinite(fit["ici_bw"])
+    assert fit["ici_latency_s"] == 0.0
+    assert all(p["residual"] == pytest.approx(1.0, rel=1e-6)
+               for p in fit["points"])
+
+
+def test_fit_flags_over_2x_model_miss():
+    # one point 3x slower than the surrogate can explain -> flagged
+    fit = modelfit.fit_series(_synthetic_points(perturb={8: 3.0}))
+    assert fit["misses"], "3x-off point must be flagged"
+    flagged = {m["ndev"] for m in fit["misses"]}
+    assert 8 in flagged
+    worst = next(m for m in fit["misses"] if m["ndev"] == 8)
+    assert worst["residual"] > 2.0
+    assert "underestimates" in worst["why"]
+
+
+def test_fit_single_point_is_bandwidth_only():
+    fit = modelfit.fit_series(_synthetic_points()[:1])
+    assert fit["npoints"] == 1
+    assert fit["ici_latency_s"] == 0.0
+    assert math.isfinite(fit["ici_bw"]) and fit["ici_bw"] > 0
+
+
+def test_fit_report_and_priors_roundtrip(tmp_path, monkeypatch):
+    report = modelfit.fit_report(
+        {"a": _synthetic_points(ici_bw=40e9, lat=2e-6),
+         "b": _synthetic_points(ici_bw=60e9, lat=4e-6)},
+        device_kind="cpu", backend="cpu")
+    assert report["schema"] == "modelfit-v1"
+    assert report["priors"]["ici_bw"] == pytest.approx(50e9, rel=1e-6)
+    assert report["priors"]["ici_latency_s"] == pytest.approx(3e-6, rel=1e-6)
+
+    path = tmp_path / "priors.json"
+    modelfit.save_priors(report, path)
+    loaded = modelfit.load_priors(path)
+    assert loaded["ici_bw"] == pytest.approx(report["priors"]["ici_bw"])
+    # non-fitted terms come back at reference values
+    assert loaded["peak_flops"] == modelfit.REFERENCE_COEFFS["peak_flops"]
+
+    # corrupt/missing files must be unusable-but-harmless, like the tuner cache
+    (tmp_path / "bad.json").write_text("{not json")
+    assert modelfit.load_priors(tmp_path / "bad.json") is None
+    assert modelfit.load_priors(tmp_path / "absent.json") is None
+
+    # priors arm ONLY via the env opt-in
+    monkeypatch.delenv("REPRO_MODEL_PRIORS", raising=False)
+    assert modelfit.active_priors() is None
+    monkeypatch.setenv("REPRO_MODEL_PRIORS", str(path))
+    assert modelfit.active_priors()["ici_bw"] == pytest.approx(
+        report["priors"]["ici_bw"])
+
+
+# -- launch accounting ------------------------------------------------------
+
+
+def test_exchange_collective_launches_counting():
+    args = (None, 0, 1)  # (src, v, w) are parity-only
+    assert exchange_collective_launches(*args) == 1
+    assert exchange_collective_launches(*args, method="pipelined", chunks=4) == 4
+    assert exchange_collective_launches(*args, nfields=3,
+                                        batch_fusion="stacked") == 1
+    assert exchange_collective_launches(*args, nfields=3,
+                                        batch_fusion="per-field") == 3
+    assert exchange_collective_launches(*args, method="pipelined", chunks=2,
+                                        nfields=3,
+                                        batch_fusion="pipelined-across-fields") == 6
+    with pytest.raises(ValueError):
+        exchange_collective_launches(*args, nfields=2, batch_fusion="bogus")
+
+
+def test_model_latency_term_matches_launch_count(subproc):
+    # the fitter's surrogate assumes model_time_s is affine in the latency
+    # coefficient with slope model_collective_launches — enforce exactly that
+    subproc("""
+from repro.core.meshutil import balanced_dims, make_mesh
+from repro.core.pfft import ParallelFFT
+for gridspec, shape in (("slab", (16, 16, 16)), ("pencil", (8, 16, 16))):
+    if gridspec == "slab":
+        mesh, grid = make_mesh((4,), ("p0",)), ("p0",)
+    else:
+        mesh, grid = make_mesh(balanced_dims(4), ("p0", "p1")), ("p0", "p1")
+    plan = ParallelFFT(mesh, shape, grid)
+    for nfields in (1, 3):
+        launches = plan.model_collective_launches(nfields=nfields)
+        assert launches > 0
+        hi = plan.model_time_s(ici_bw=1e30, ici_latency_s=1e-3, nfields=nfields)
+        lo = plan.model_time_s(ici_bw=1e30, ici_latency_s=0.0, nfields=nfields)
+        got = (hi - lo) / 1e-3
+        assert abs(got - launches) < 1e-6, (gridspec, nfields, got, launches)
+print("LAUNCH PARITY OK")
+""", ndev=4)
+
+
+def test_tuner_prior_pruning_opt_in(subproc, tmp_path):
+    # with REPRO_MODEL_PRIORS armed, the tuner micro-benchmarks only the
+    # prior-ranked top-K candidates per stage and records the rest as
+    # pruned: model estimates; without the env var every candidate is
+    # timed (tests/test_tuner.py pins that contract)
+    report = modelfit.fit_report({"s": _synthetic_points()})
+    priors_path = tmp_path / "priors.json"
+    modelfit.save_priors(report, priors_path)
+    subproc(f"""
+import os
+os.environ["REPRO_MODEL_PRIORS"] = {str(priors_path)!r}
+os.environ["REPRO_TUNER_PRIOR_TOPK"] = "3"
+from repro.core.meshutil import balanced_dims, make_mesh
+from repro.core.pfft import ExchangeStage, ParallelFFT
+from repro.core import tuner
+mesh = make_mesh(balanced_dims(4), ("p0", "p1"))
+plan = ParallelFFT(mesh, (16, 8, 8), ("p0", "p1"))
+schedule, timings = tuner.tune_plan(plan, repeats=1, inner=1)
+assert len(schedule) == sum(isinstance(s, ExchangeStage) for s in plan.stages)
+for stage, per in timings.items():
+    timed = [t for t in per if not t.startswith("pruned:")]
+    pruned = [t for t in per if t.startswith("pruned:")]
+    assert len(timed) == 3, (stage, sorted(per))
+    assert pruned, stage
+    assert all(per[t] > 0 for t in pruned)
+print("PRIOR PRUNING OK")
+""", ndev=4)
+
+
+# -- scalebench series bookkeeping ------------------------------------------
+
+
+def test_series_name_and_point_shape():
+    s = {"mode": "strong", "grid": "slab", "shape": (16, 16, 16),
+         "method": "fused", "fields": 1}
+    assert scalebench._series_name(s) == "strong@slab@16x16x16@fused@complex64@jnp"
+    assert scalebench._point_shape(s, 4) == (16, 16, 16)
+    w = {"mode": "weak", "grid": "pencil", "shape": (8, 16, 16),
+         "method": "fused", "fields": 3, "comm_dtype": "bf16",
+         "exchange_impl": "pallas"}
+    assert scalebench._series_name(w) == "weak@pencil@loc8x16x16@fused@bf16@pallas@f3"
+    assert scalebench._point_shape(w, 4) == (32, 16, 16)
+
+
+def test_smoke_preset_shape():
+    series = scalebench.preset_series("smoke")
+    assert {s["grid"] for s in series} == {"slab", "pencil"}
+    assert {s["mode"] for s in series} == {"strong", "weak"}
+    assert any(s.get("fields", 1) > 1 for s in series)
+    # the redistribution split is swept on at least one series per grid
+    assert all(any(s.get("split") for s in series if s["grid"] == g)
+               for g in ("slab", "pencil"))
+    assert all(s["devices"] for s in series)
+    with pytest.raises(SystemExit):
+        scalebench.preset_series("bogus")
+
+
+def _raw_sweep(perturb=None):
+    pts = _synthetic_points(perturb=perturb)
+    for p in pts:
+        p.update(p50_s=p["best_s"] * 1.04, spread_frac=0.04,
+                 device_kind="cpu", backend="cpu")
+    redist = [dict(p, best_s=p["best_s"] * 0.4, p50_s=p["best_s"] * 0.42)
+              for p in pts[:2]]
+    return {"scalebench": True, "preset": "smoke", "inner": 1, "outer": 2,
+            "series": [{
+                "name": "strong@slab@16x16x16@fused@complex64@jnp",
+                "mode": "strong", "grid": "slab", "method": "fused",
+                "fields": 1, "base_shape": [16, 16, 16],
+                "comm_dtype": None, "exchange_impl": "jnp",
+                "points": pts, "redist_points": redist}]}
+
+
+def test_normalize_scaling_bench_v3_roundtrip():
+    bench = normalize_scaling(_raw_sweep(), pr=99)
+    assert bench["schema"] == "bench-v3"
+    assert bench["pr"] == 99
+    assert bench["device_kind"] == "cpu"
+    report = bench.pop("_fit_report")
+    assert report["schema"] == "modelfit-v1"
+    assert json.loads(json.dumps(bench)) == bench  # JSON-able
+
+    series = bench["series"]["strong@slab@16x16x16@fused@complex64@jnp"]
+    assert series["comm_dtype"] == "complex64"
+    assert len(series["points"]) == 4
+    for p in series["points"]:
+        # the acceptance contract: measured time + model time + residual
+        # on every committed point
+        assert p["best_s"] > 0
+        assert p["model_time_s"] > 0
+        assert p["fit_time_s"] > 0
+        assert p["residual"] == pytest.approx(1.0, rel=1e-6)
+    assert series["fit"]["ici_bw"] == pytest.approx(40e9, rel=1e-6)
+    assert len(series["redist"]["points"]) == 2
+    # the redist sub-series got its own fit entry in the report
+    assert any(k.endswith("#redist") for k in report["series"])
+
+
+def test_benchdiff_v3_catches_synthetic_regression(tmp_path):
+    old = normalize_scaling(_raw_sweep())
+    old.pop("_fit_report")
+    slowed = normalize_scaling(_raw_sweep(perturb={8: 1.9}))
+    slowed.pop("_fit_report")
+
+    rep = diff_records(old, slowed, min_time=0.0)
+    bad = [r["key"] for r in rep["regressions"]]
+    assert bad == ["strong@slab@16x16x16@fused@complex64@jnp#nd8"]
+    assert not rep["advisory"]
+
+    # the CLI gate exits nonzero on it (this is what CI runs)
+    (tmp_path / "old.json").write_text(json.dumps(old))
+    (tmp_path / "new.json").write_text(json.dumps(slowed))
+    rc = benchdiff_main([str(tmp_path / "old.json"),
+                         str(tmp_path / "new.json"),
+                         "--min-time", "0",
+                         "--out", str(tmp_path / "diff.json")])
+    assert rc == 1
+    out = json.loads((tmp_path / "diff.json").read_text())
+    assert [r["key"] for r in out["regressions"]] == bad
+
+    # ... and is clean on a no-change comparison
+    assert benchdiff_main([str(tmp_path / "old.json"),
+                           str(tmp_path / "old.json"),
+                           "--min-time", "0"]) == 0
+
+
+def test_benchdiff_noise_and_min_time_guards():
+    old = normalize_scaling(_raw_sweep())
+    old.pop("_fit_report")
+    # a 30% slowdown with 20% measured spread on the new side stays inside
+    # the widened threshold (0.25 + 1.0 * 0.20)
+    noisy = normalize_scaling(_raw_sweep(perturb={8: 1.3}))
+    noisy.pop("_fit_report")
+    for p in noisy["series"]["strong@slab@16x16x16@fused@complex64@jnp"]["points"]:
+        p["spread_frac"] = 0.20
+    assert not diff_records(old, noisy, min_time=0.0)["regressions"]
+
+    # sub-min-time keys are skipped entirely
+    rep = diff_records(old, old, min_time=1e3)
+    assert not rep["compared"] and len(rep["skipped"]) == rep["matched"]
+
+    # different device_kind -> advisory, never enforced
+    other = json.loads(json.dumps(old))
+    other["device_kind"] = "TPU v5e"
+    rep = diff_records(old, other, min_time=0.0)
+    assert rep["advisory"] and "advisory_reason" in rep
+
+
+def test_benchdiff_reads_committed_v1_v2_records():
+    # the committed perf-trajectory records must keep flattening (BENCH_pr3
+    # is bench-v1, pr4/7/8 bench-v2; pr9 is a serve-bench record with no
+    # fftbench rows) and self-diff clean
+    for name in ("BENCH_pr3.json", "BENCH_pr4.json", "BENCH_pr8.json"):
+        rec = json.loads((REPO / "benchmarks" / name).read_text())
+        rows = flatten_record(rec)
+        assert rows, name
+        assert all(r["best_s"] > 0 for r in rows.values()), name
+        rep = diff_records(rec, rec)
+        assert rep["matched"] == len(rows)
+        assert not rep["regressions"] and not rep["improvements"]
+
+
+def test_benchdiff_disjoint_records_warn_not_fail():
+    v1 = json.loads((REPO / "benchmarks" / "BENCH_pr3.json").read_text())
+    v3 = normalize_scaling(_raw_sweep())
+    v3.pop("_fit_report")
+    rep = diff_records(v1, v3)
+    assert rep["matched"] == 0 and not rep["regressions"]
+
+
+# -- figures ----------------------------------------------------------------
+
+
+def test_render_scaling_figures(tmp_path):
+    pytest.importorskip("matplotlib")
+    from benchmarks.paperfigs import render_scaling_figures
+
+    bench = normalize_scaling(_raw_sweep())
+    bench.pop("_fit_report")
+    paths = render_scaling_figures(bench, tmp_path)
+    names = {p.name for p in paths}
+    assert names == {"scaling_strong_slab.svg", "scaling_strong_slab.png",
+                     "redistribution_split_slab.svg",
+                     "redistribution_split_slab.png"}
+    assert all(p.stat().st_size > 0 for p in paths)
+
+
+def test_scalebench_one_real_point(subproc):
+    # one end-to-end worker subprocess through scalebench.run_point: the
+    # emitted blob must carry everything _series_point needs
+    out = subprocess.run(
+        [sys.executable, "-c", f"""
+import sys
+sys.path.insert(0, {str(REPO)!r})
+import json
+from benchmarks.scalebench import run_point
+r = run_point((8, 8, 8), 2, grid="slab", method="fused", measure="total",
+              inner=1, outer=2)
+assert r["best_s"] > 0 and r["p50_s"] >= r["best_s"]
+assert r["spread_frac"] >= 0
+m = r["model"]
+assert m["time_s"] > 0 and m["compute_s"] > 0
+assert m["wire_bytes_per_dev"] > 0 and m["launches"] >= 1
+print("POINT OK", json.dumps(m))
+"""],
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "POINT OK" in out.stdout
